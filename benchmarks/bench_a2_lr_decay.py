@@ -1,0 +1,25 @@
+"""Appendix A.2: token-wise vs step-wise LR decay under SLW.
+
+Step-wise cosine decays too fast in token space for SLW (fewer tokens per
+warmup step) and hurts final quality; token-wise decay matches the baseline
+schedule exactly.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, bench_config, final_ppl, run_arm
+
+
+def run(quick: bool = False) -> List[Row]:
+    steps = 80 if quick else 200
+    rows = []
+    for sched in ("token_cosine", "step_cosine"):
+        name, res, wall = run_arm(
+            f"a2/slw_{sched}",
+            bench_config(slw=True, lr=2e-2, steps=steps,
+                         duration=steps // 2, schedule=sched))
+        rows.append((name, wall / max(res.steps, 1) * 1e6,
+                     f"final_ppl={final_ppl(res):.2f} "
+                     f"final_lr={res.lr_history[-1]:.2e}"))
+    return rows

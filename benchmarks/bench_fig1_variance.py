@@ -1,0 +1,40 @@
+"""Fig. 1 + Table 3: Adam variance norm/max telemetry and its correlation
+with loss-ratio spikes."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, bench_config, run_arm
+from repro.core import pearson
+
+
+def run(quick: bool = False) -> List[Row]:
+    steps = 80 if quick else 200
+    name, res, wall = run_arm(
+        "fig1/baseline_aggressive",
+        bench_config(slw=False, lr=0.5, steps=steps))
+    ratios = np.asarray([r if np.isfinite(r) else 10.0
+                         for r in res.loss_ratios])
+    var_max = np.asarray(res.var_max_history)[:len(ratios)]
+    var_l1 = np.asarray(res.var_l1_history)[:len(ratios)]
+    r_max, p_max = pearson(ratios, var_max)
+    r_l1, p_l1 = pearson(ratios, var_l1)
+
+    name2, res2, wall2 = run_arm(
+        "fig1/slw_aggressive",
+        bench_config(slw=True, lr=0.5, steps=steps, duration=steps // 2))
+    us = wall / max(res.steps, 1) * 1e6
+    return [
+        ("fig1/pearson_lossratio_vs_varmax", us,
+         f"r={r_max:.3f} p={p_max:.2e} (paper: 0.26, p~0)"),
+        ("fig1/pearson_lossratio_vs_varnorm", us,
+         f"r={r_l1:.3f} p={p_l1:.2e} (paper: 0.23, p~0)"),
+        ("fig1/varmax_peak_baseline", us,
+         f"peak={np.nanmax(var_max):.3e}"),
+        ("fig1/varmax_peak_slw", wall2 / max(res2.steps, 1) * 1e6,
+         f"peak={np.nanmax(res2.var_max_history):.3e} "
+         f"spikes={res2.tracker_summary['spikes']} vs baseline "
+         f"{res.tracker_summary['spikes']}"),
+    ]

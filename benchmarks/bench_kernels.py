@@ -1,0 +1,88 @@
+"""Kernel microbenchmarks: Pallas (interpret mode on CPU) vs pure-jnp refs.
+
+On this CPU container interpret mode measures *correctness* plumbing, not
+TPU speed; the derived column reports the max |err| vs the oracle and the
+analytic FLOPs the kernel would execute on the TPU target.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from repro.kernels import flash_attention, ssd, wkv6
+from repro.kernels.flash_attention.ref import attention_reference
+from repro.kernels.rwkv6.ref import wkv6_sequential
+from repro.kernels.ssd.ref import ssd_fwd_reference
+
+
+def _timeit(fn, *args, reps=3):
+    fn(*args)  # compile/warm
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6
+
+
+def run(quick: bool = False) -> List[Row]:
+    rows: List[Row] = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+
+    # flash attention
+    b, s, h, kv, d = 1, 256, 4, 2, 32
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, kv, d))
+    v = jax.random.normal(ks[2], (b, s, kv, d))
+    fa = lambda: flash_attention(q, k, v, causal=True, block_q=64,
+                                 block_k=64, interpret=True)
+    us = _timeit(lambda *_: fa())
+    g = h // kv
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = jnp.repeat(k, g, 2).transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vf = jnp.repeat(v, g, 2).transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    ref = attention_reference(qf, kf, vf).reshape(b, h, s, d).transpose(
+        0, 2, 1, 3)
+    err = float(jnp.max(jnp.abs(fa() - ref)))
+    tpu_flops = 2 * 2 * b * h * s * s / 2 * d
+    rows.append(("kernels/flash_attention_interp", us,
+                 f"max_err={err:.2e} causal_tpu_flops={tpu_flops:.2e}"))
+
+    # ssd
+    b2, h2, s2, p2, n2 = 1, 2, 256, 32, 16
+    x = jax.random.normal(ks[3], (b2, h2, s2, p2))
+    dt = jax.nn.softplus(jax.random.normal(ks[4], (b2, h2, s2)))
+    a = -jnp.exp(jax.random.normal(ks[5], (h2,)) * 0.5)
+    bi = jax.random.normal(ks[6], (b2, s2, n2))
+    ci = jax.random.normal(ks[7], (b2, s2, n2))
+    f_ssd = lambda: ssd(x, dt, a, bi, ci, chunk=64, interpret=True)
+    us = _timeit(lambda *_: f_ssd())
+    y, st = f_ssd()
+    yr, sr = ssd_fwd_reference(x, dt, a, bi, ci, chunk=64)
+    err = float(jnp.max(jnp.abs(y - yr)))
+    rows.append(("kernels/ssd_interp", us, f"max_err={err:.2e}"))
+
+    # wkv6
+    r = jax.random.normal(ks[0], (1, 2, 128, 16))
+    kk = jax.random.normal(ks[1], (1, 2, 128, 16))
+    vv = jax.random.normal(ks[2], (1, 2, 128, 16))
+    lw = -jnp.exp(jax.random.normal(ks[3], (1, 2, 128, 16)) * 0.5)
+    u = jax.random.normal(ks[4], (2, 16)) * 0.5
+    f_wkv = lambda: wkv6(r, kk, vv, lw, u, chunk=32, interpret=True)
+    us = _timeit(lambda *_: f_wkv())
+    y, st = f_wkv()
+    yr, sr = wkv6_sequential(r, kk, vv, lw, u)
+    err = float(jnp.max(jnp.abs(y - yr)))
+    rows.append(("kernels/wkv6_interp", us, f"max_err={err:.2e}"))
+
+    # XLA-path blockwise attention (the production fallback) for scale
+    from repro.models.attention import blockwise_attention
+    f_blk = jax.jit(lambda q, k, v: blockwise_attention(q, k, v, True, 64))
+    us = _timeit(f_blk, q, k, v)
+    rows.append(("kernels/blockwise_attention_xla", us,
+                 "jnp online-softmax fallback (same oracle)"))
+    return rows

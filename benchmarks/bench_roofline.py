@@ -1,0 +1,64 @@
+"""Roofline table generator — reads the dry-run artifacts
+(experiments/dryrun/*.json + *.measure.json) and emits the per-cell
+three-term roofline (§Roofline of EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.common import Row
+from repro.roofline import build_report
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_cells(mesh: str = "single", tag: str = "") -> List[Dict]:
+    cells = []
+    suffix = f".{tag}" if tag else ""
+    for path in sorted(glob.glob(os.path.join(
+            DRYRUN_DIR, f"*__{mesh}{suffix}.json"))):
+        if ".measure" in path:
+            continue
+        with open(path) as f:
+            rec = json.load(f)
+        mpath = path.replace(".json", ".measure.json") if not tag else \
+            path.replace(f"{suffix}.json", f".measure{suffix}.json")
+        measure = None
+        if os.path.exists(mpath):
+            with open(mpath) as f:
+                measure = json.load(f)
+        cells.append({"record": rec, "measure": measure})
+    return cells
+
+
+def table(mesh: str = "single", tag: str = "") -> List[Dict]:
+    out = []
+    for cell in load_cells(mesh, tag):
+        rep = build_report(cell["record"], cell["measure"])
+        row = rep.summary()
+        row["measured"] = cell["measure"] is not None
+        out.append(row)
+    return out
+
+
+def run(quick: bool = False) -> List[Row]:
+    rows: List[Row] = []
+    cells = table("single")
+    if not cells:
+        return [("roofline/no_dryrun_artifacts", 0.0,
+                 "run: python -m repro.launch.dryrun first")]
+    for c in cells:
+        name = f"roofline/{c['arch']}__{c['shape']}"
+        t_step = max(c["t_compute_s"], c["t_memory_s"], c["t_collective_s"])
+        derived = (f"comp={c['t_compute_s']*1e3:.1f}ms "
+                   f"mem={c['t_memory_s']*1e3:.1f}ms "
+                   f"coll={c['t_collective_s']*1e3:.1f}ms "
+                   f"bound={c['bottleneck']} "
+                   f"useful={c['useful_flops_ratio']:.2f} "
+                   f"mfu_ub={c['mfu_upper_bound']:.3f}"
+                   + ("" if c["measured"] else " [unmeasured]"))
+        rows.append((name, t_step * 1e6, derived))
+    return rows

@@ -1,0 +1,57 @@
+"""Benchmark harness: one module per paper table/figure + kernels + roofline.
+
+Prints ``name,us_per_call,derived`` CSV (one line per measurement).
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only table1,fig1,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+SUITES = [
+    ("table1", "benchmarks.bench_table1_stability"),
+    ("table2", "benchmarks.bench_table2_pareto"),
+    ("fig1", "benchmarks.bench_fig1_variance"),
+    ("fig2", "benchmarks.bench_fig2_mixed_seqlen"),
+    ("fig3", "benchmarks.bench_fig3_pacing"),
+    ("table4", "benchmarks.bench_table4_gpt3recipe"),
+    ("a2", "benchmarks.bench_a2_lr_decay"),
+    ("kernels", "benchmarks.bench_kernels"),
+    ("roofline", "benchmarks.bench_roofline"),
+]
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--quick", action="store_true")
+    p.add_argument("--only", default="",
+                   help="comma-separated suite keys (default: all)")
+    args = p.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    import importlib
+    print("name,us_per_call,derived")
+    failures = 0
+    for key, module_name in SUITES:
+        if only is not None and key not in only:
+            continue
+        try:
+            mod = importlib.import_module(module_name)
+            t0 = time.time()
+            rows = mod.run(quick=args.quick)
+            for name, us, derived in rows:
+                print(f'{name},{us:.1f},"{derived}"', flush=True)
+            print(f'_suite/{key},{(time.time()-t0)*1e6:.0f},"suite wall time"',
+                  flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            print(f'{key}/ERROR,0,"{type(e).__name__}: {e}"', flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

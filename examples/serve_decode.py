@@ -1,0 +1,28 @@
+"""Batched serving example: prefill + KV-cache greedy decode.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch smollm-360m
+    PYTHONPATH=src python examples/serve_decode.py --arch rwkv6-7b  # O(1) state
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import serve
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="smollm-360m")
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=48)
+    p.add_argument("--gen", type=int, default=24)
+    p.add_argument("--full", action="store_true",
+                   help="use the full config (needs a real accelerator)")
+    args = p.parse_args()
+    serve(args.arch, use_reduced=not args.full, batch=args.batch,
+          prompt_len=args.prompt_len, gen_tokens=args.gen)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""The paper's low-cost tuning strategy (§4), runnable.
+
+Finds (seqlen_s, T) with short probe runs only — no full trainings:
+  1. start at seqlen_s=8, T = 1x LR-warmup;
+  2. raise seqlen_s until early validation perplexity stops fluctuating;
+  3. binary-search the largest calm T.
+
+    PYTHONPATH=src python examples/tuning_strategy.py
+"""
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks.common import bench_config
+from repro.configs.base import SLWConfig
+from repro.core import tune_slw
+from repro.launch.train import train
+
+WARMUP = 15
+LR = 6e-2
+
+
+def probe(slw_cfg: SLWConfig):
+    """Train only the early window; return the validation-ppl trace."""
+    tc = bench_config(slw=True, lr=LR, steps=3 * WARMUP, warmup_steps=WARMUP)
+    tc = dataclasses.replace(tc, slw=slw_cfg, eval_interval=5)
+    res = train(tc, quiet=True, stop_on_nan=False)
+    return [p for _, p in res.val_ppl_history]
+
+
+def main():
+    result = tune_slw(probe, SLWConfig(round_multiple=8, max_buckets=12),
+                      warmup_steps=WARMUP, seqlen_s_grid=(8, 16, 32),
+                      t_multiple_range=(1, 8))
+    print("probe trials (seqlen_s, T, fluctuated):")
+    for t in result.trials:
+        print("  ", t)
+    print(f"\nchosen: seqlen_s={result.seqlen_s} T={result.duration} "
+          f"({result.probe_runs} probes of {3 * WARMUP} steps each — "
+          f"a small fraction of any full training)")
+
+
+if __name__ == "__main__":
+    main()

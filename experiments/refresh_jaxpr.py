@@ -1,0 +1,44 @@
+"""Re-trace jaxpr flops/bytes for existing measure records (fast; keeps the
+expensive collective-extrapolation points)."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=1"
+import glob, json, sys
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp
+from repro.configs import get_arch
+from repro.configs.base import OptimizerConfig
+from repro.launch import steps as steps_lib
+from repro.models import model_zoo
+from repro.roofline.jaxpr_cost import analyze_fn
+
+for path in sorted(glob.glob("experiments/dryrun/*.measure*.json")):
+    rec = json.load(open(path))
+    spec = get_arch(rec["arch"])
+    shape = spec.shape(rec["shape"])
+    cfg = spec.model
+    if rec.get("moe_dispatch") and cfg.family == "moe":
+        cfg = cfg.replace(moe_dispatch=rec["moe_dispatch"])
+    elif cfg.family == "moe":
+        cfg = cfg.replace(moe_dispatch="global")  # pre-flag records
+    model = model_zoo.build_model(cfg, dtype=jnp.bfloat16,
+                                  remat=rec.get("remat", "full"))
+    if shape.kind == "train":
+        fn = steps_lib.make_train_step(model, OptimizerConfig(), None)
+        state = steps_lib.abstract_train_state(cfg)
+        batch = model_zoo.train_batch_specs(cfg, shape.global_batch, shape.seq_len)
+        cost = analyze_fn(fn, state, batch, jax.ShapeDtypeStruct((), jnp.float32))
+    elif shape.kind == "prefill":
+        fn = steps_lib.make_prefill_step(model, None)
+        batch = model_zoo.prefill_batch_specs(cfg, shape.global_batch, shape.seq_len)
+        cost = analyze_fn(fn, model_zoo.abstract_params(cfg), batch)
+    else:
+        fn = steps_lib.make_serve_step(model, None)
+        cache = model.cache_shapes(shape.global_batch, shape.seq_len)
+        tokens = model_zoo.decode_token_specs(shape.global_batch)
+        cost = analyze_fn(fn, model_zoo.abstract_params(cfg), cache, tokens)
+    rec["jaxpr_flops_global"] = cost.flops
+    rec["jaxpr_bytes_global"] = cost.bytes
+    rec["jaxpr_flops_by_prim"] = {k: v for k, v in sorted(
+        cost.by_prim.items(), key=lambda kv: -kv[1])[:8]}
+    json.dump(rec, open(path, "w"), indent=1)
+    print("refreshed", os.path.basename(path), f"bytes={cost.bytes:.3e}")

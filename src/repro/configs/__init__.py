@@ -1,0 +1,97 @@
+"""Architecture registry: ``get_arch(name)`` / ``--arch <id>``.
+
+Ten assigned architectures (public literature, see per-file docstrings) plus
+the paper's own GPT-2/GPT-3 replicas.  ``reduced(model)`` produces a small
+same-family config for CPU smoke tests; the full configs are exercised only
+through the dry-run (ShapeDtypeStruct, no allocation).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import (
+    ArchSpec,
+    BatchWarmupConfig,
+    LM_SHAPES,
+    ModelConfig,
+    OptimizerConfig,
+    ShapeConfig,
+    SLWConfig,
+    TrainConfig,
+)
+
+from repro.configs import (  # noqa: E402
+    deepseek_moe_16b,
+    gpt2,
+    llava_next_mistral_7b,
+    moonshot_v1_16b_a3b,
+    musicgen_large,
+    phi3_mini_3p8b,
+    qwen2_1p5b,
+    qwen3_32b,
+    rwkv6_7b,
+    smollm_360m,
+    zamba2_2p7b,
+)
+
+# The 10 assigned architectures (dry-run + roofline targets).
+ASSIGNED: Dict[str, ArchSpec] = {
+    "zamba2-2.7b": zamba2_2p7b.SPEC,
+    "smollm-360m": smollm_360m.SPEC,
+    "phi3-mini-3.8b": phi3_mini_3p8b.SPEC,
+    "qwen3-32b": qwen3_32b.SPEC,
+    "qwen2-1.5b": qwen2_1p5b.SPEC,
+    "rwkv6-7b": rwkv6_7b.SPEC,
+    "moonshot-v1-16b-a3b": moonshot_v1_16b_a3b.SPEC,
+    "deepseek-moe-16b": deepseek_moe_16b.SPEC,
+    "musicgen-large": musicgen_large.SPEC,
+    "llava-next-mistral-7b": llava_next_mistral_7b.SPEC,
+}
+
+# The paper's own models (benchmarks / examples).
+PAPER: Dict[str, ArchSpec] = {
+    "gpt2-117m": gpt2.SPEC_GPT2_117M,
+    "gpt2-1.5b": gpt2.SPEC_GPT2_1P5B,
+    "gpt3-125m": gpt2.SPEC_GPT3_125M,
+}
+
+ARCHS: Dict[str, ArchSpec] = {**ASSIGNED, **PAPER}
+
+
+def get_arch(name: str) -> ArchSpec:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def reduced(model: ModelConfig) -> ModelConfig:
+    """Small same-family config for CPU smoke tests (one fwd/train step)."""
+    kw = dict(
+        name=model.name + "-reduced",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=max(1, 4 * model.n_kv_heads // max(model.n_heads, 1)),
+        head_dim=16,
+        d_ff=96,
+        vocab_size=512,
+        max_seq_len=256,
+        prefix_tokens=8 if model.frontend == "vision_patches" else 0,
+    )
+    if model.family == "moe":
+        kw.update(n_experts=4, n_shared_experts=min(model.n_shared_experts, 1),
+                  top_k=2)
+    if model.family == "hybrid":
+        kw.update(n_layers=4, attn_every=2, ssm_state=16, ssm_head_dim=16,
+                  ssm_chunk=32)
+    if model.family == "rwkv":
+        kw.update(n_heads=4, n_kv_heads=4, rwkv_head_dim=16, rwkv_lora_rank=8,
+                  rwkv_chunk=16)
+    return model.replace(**kw)
+
+
+__all__ = [
+    "ARCHS", "ASSIGNED", "PAPER", "ArchSpec", "BatchWarmupConfig", "LM_SHAPES",
+    "ModelConfig", "OptimizerConfig", "ShapeConfig", "SLWConfig", "TrainConfig",
+    "get_arch", "reduced",
+]

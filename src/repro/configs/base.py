@@ -1,0 +1,208 @@
+"""Config dataclasses for the SLW framework.
+
+Everything is a frozen dataclass so configs are hashable and safe to use as
+compile-cache keys (the SLW curriculum compiles one step function per sequence
+length bucket).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture definition. One instance per assigned architecture."""
+
+    name: str
+    family: str  # dense | moe | rwkv | hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    # attention options
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    pos_emb: str = "rope"  # rope | learned | none
+    # block options
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    mlp: str = "swiglu"  # swiglu | gelu
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # global: paper-era single global capacity buffer (pathological under
+    # SPMD — see EXPERIMENTS.md §Perf); row_local: per-batch-row ranking,
+    # shard-local dispatch arithmetic (production default)
+    moe_dispatch: str = "row_local"
+    router_aux_coef: float = 0.01
+    router_z_coef: float = 1e-3
+    # SSM (Mamba-2 / SSD)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 128
+    conv_kernel: int = 4
+    # hybrid (zamba2): one *shared* attention+MLP block applied every attn_every
+    # SSM layers (shared weights, per-application KV cache)
+    attn_every: int = 0
+    # rwkv6
+    rwkv_head_dim: int = 64
+    rwkv_lora_rank: int = 64
+    rwkv_chunk: int = 64
+    # modality frontend stubs (backbone-only per the assignment):
+    #   none           – token LM
+    #   audio_frames   – input_specs provide precomputed frame embeddings (B,S,D)
+    #   vision_patches – tokens plus a fixed image-patch embedding prefix (B,P,D)
+    frontend: str = "none"
+    prefix_tokens: int = 0
+    max_seq_len: int = 532480  # generous default; shapes clamp per cell
+    # numerics
+    logits_softcap: float = 0.0
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "rwkv"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Whether the arch supports 500K-context decode (SSM/hybrid/linear)."""
+        return self.family in ("rwkv", "hybrid")
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One (input-shape) cell. kind selects which step function is lowered."""
+
+    name: str  # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+# The assigned LM shape set (identical across the 10 architectures).
+LM_SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", "train", 4096, 256),
+    ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    ShapeConfig("decode_32k", "decode", 32768, 128),
+    ShapeConfig("long_500k", "decode", 524288, 1),
+)
+
+
+@dataclass(frozen=True)
+class SLWConfig:
+    """Sequence Length Warmup — the paper's contribution (Section 4)."""
+
+    enabled: bool = True
+    # pacing: linear (paper default) | root | two_stage (Shortformer baseline)
+    #         | variance_gated (beyond-paper) | constant
+    pacing: str = "linear"
+    start_seq_len: int = 8  # seqlen_s
+    end_seq_len: int = 0  # seqlen_e; 0 -> full shape seq_len
+    duration_steps: int = 0  # T;  0 -> 2x LR warmup steps
+    root_degree: float = 2.0
+    # hardware rounding. Paper: 8 (V100 tensor cores). TPU: 128 (lane dim).
+    round_multiple: int = 8
+    # bucketing bounds the number of XLA recompiles (TPU adaptation; the paper's
+    # eager implementation pays no recompile cost).
+    max_buckets: int = 32
+    # truncate: paper-faithful (drops tail tokens).  repack: beyond-paper —
+    # reshape (B, S) -> (B*S//s_t, s_t) so token throughput stays constant.
+    mode: str = "truncate"
+    # two_stage (Shortformer) parameters
+    two_stage_short_len: int = 128
+    two_stage_switch_step: int = 0  # 0 -> duration_steps
+    # variance_gated parameters: advance only while var_max < gate * trailing
+    variance_gate: float = 2.0
+
+
+@dataclass(frozen=True)
+class BatchWarmupConfig:
+    """GPT-3 style batch-size warmup (baseline the paper compares against)."""
+
+    enabled: bool = False
+    start_batch: int = 16
+    warmup_tokens: int = 4_000_000_000
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 6e-4
+    min_lr: float = 1e-5
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    # token_wise cosine decay (paper Appendix A.2) or step_wise (baseline GPT-2)
+    schedule: str = "token_cosine"  # token_cosine | step_cosine | constant
+    warmup_steps: int = 0
+    warmup_tokens: int = 0
+    total_steps: int = 0
+    total_tokens: int = 0
+    # 1-bit-Adam style compressed gradient all-reduce (beyond-paper extension)
+    grad_compression: bool = False
+    compression_warmup_steps: int = 0
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    model: ModelConfig
+    optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
+    slw: SLWConfig = field(default_factory=SLWConfig)
+    batch_warmup: BatchWarmupConfig = field(default_factory=BatchWarmupConfig)
+    seq_len: int = 1024
+    global_batch: int = 512
+    seed: int = 1234
+    # remat: none | full | dots  (activation checkpointing policy for the layer scan)
+    remat: str = "full"
+    # sharding rule set: "baseline" (paper-era DP+TP) | "fsdp" (optimized)
+    sharding_rules: str = "fsdp"
+    # cast params to bf16 *before* they are consumed (so FSDP all-gathers move
+    # bf16 bytes, not fp32) — perf lever, see EXPERIMENTS.md §Perf
+    cast_params_before_use: bool = True
+    eval_interval: int = 100
+    log_interval: int = 10
+    checkpoint_interval: int = 500
+    checkpoint_dir: str = ""
+    keep_checkpoints: int = 3
+
+
+@dataclass(frozen=True)
+class ArchSpec:
+    """An assigned architecture: model + its shape cells + dry-run notes."""
+
+    model: ModelConfig
+    shapes: Tuple[ShapeConfig, ...] = LM_SHAPES
+    source: str = ""
+    notes: str = ""
+
+    def shape(self, name: str) -> ShapeConfig:
+        for s in self.shapes:
+            if s.name == name:
+                return s
+        raise KeyError(f"{self.model.name} has no shape {name!r}")
+
+    def runnable_shapes(self) -> Tuple[ShapeConfig, ...]:
+        """Cells actually lowered. long_500k only for sub-quadratic archs."""
+        out = []
+        for s in self.shapes:
+            if s.name == "long_500k" and not self.model.sub_quadratic:
+                continue  # documented skip: full-attention arch at 500K context
+            out.append(s)
+        return tuple(out)

@@ -1,0 +1,26 @@
+"""deepseek-moe-16b — fine-grained MoE: 2 shared + 64 routed experts, top-6.
+
+[arXiv:2401.06066; hf]  28L d_model=2048 16H (GQA kv=16) d_ff=1408 (per expert)
+vocab=102400.
+"""
+from repro.configs.base import ArchSpec, ModelConfig
+
+MODEL = ModelConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,
+    vocab_size=102400,
+    n_experts=64,
+    n_shared_experts=2,
+    top_k=6,
+)
+
+SPEC = ArchSpec(
+    model=MODEL,
+    source="arXiv:2401.06066",
+    notes="EP: experts sharded over the model axis; long_500k skipped: full attention",
+)

@@ -1,0 +1,44 @@
+"""The paper's own models: GPT-2 117M / 1.5B and GPT-3 125M replicas.
+
+These mirror the configurations in Section 3 / 5 of the paper (Radford et al.
+GPT-2; Brown et al. GPT-3 small), with learned positional embeddings,
+LayerNorm and GELU MLPs — the Megatron-LM-era architecture the paper trains.
+"""
+from repro.configs.base import ArchSpec, ModelConfig, ShapeConfig
+
+GPT2_117M = ModelConfig(
+    name="gpt2-117m",
+    family="dense",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    vocab_size=50257,
+    pos_emb="learned",
+    norm="layernorm",
+    mlp="gelu",
+    tie_embeddings=True,
+    max_seq_len=2048,
+)
+
+GPT2_1P5B = GPT2_117M.replace(
+    name="gpt2-1.5b", n_layers=48, d_model=1600, n_heads=25, n_kv_heads=25,
+    d_ff=6400, head_dim=64,
+)
+
+GPT3_125M = GPT2_117M.replace(name="gpt3-125m", max_seq_len=2048)
+
+# Paper training shapes: GPT-2 uses seqlen 1K (2K for the GPT-3-style runs).
+PAPER_SHAPES = (
+    ShapeConfig("train_1k_b512", "train", 1024, 512),
+    ShapeConfig("train_1k_b4k", "train", 1024, 4096),
+    ShapeConfig("train_2k_b512", "train", 2048, 512),
+)
+
+SPEC_GPT2_117M = ArchSpec(model=GPT2_117M, shapes=PAPER_SHAPES,
+                          source="paper §3 (Radford et al. 2019)")
+SPEC_GPT2_1P5B = ArchSpec(model=GPT2_1P5B, shapes=PAPER_SHAPES,
+                          source="paper §3 (Radford et al. 2019)")
+SPEC_GPT3_125M = ArchSpec(model=GPT3_125M, shapes=PAPER_SHAPES,
+                          source="paper §5.2 (Brown et al. 2020)")

@@ -1,0 +1,29 @@
+"""llava-next-mistral-7b — VLM: mistral-7b backbone, anyres patch prefix.
+
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]  32L d_model=4096 32H
+(GQA kv=8) d_ff=14336 vocab=32000.  The vision tower is a STUB per the
+assignment: input_specs() provide precomputed patch embeddings (B, P, d_model)
+that are prepended to the text token embeddings.  SLW warms up only the text
+segment (the patch prefix is never truncated).
+"""
+from repro.configs.base import ArchSpec, ModelConfig
+
+MODEL = ModelConfig(
+    name="llava-next-mistral-7b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=32000,
+    frontend="vision_patches",
+    prefix_tokens=576,  # one 24x24 anyres base tile
+)
+
+SPEC = ArchSpec(
+    model=MODEL,
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf (unverified tier)",
+    notes="vision frontend stubbed (precomputed patch embeddings); "
+    "long_500k skipped: full attention",
+)

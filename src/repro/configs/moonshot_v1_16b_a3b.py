@@ -1,0 +1,26 @@
+"""moonshot-v1-16b-a3b (kimi/moonlight) — fine-grained MoE, 64 experts top-6.
+
+[hf:moonshotai/Moonlight-16B-A3B; hf]  48L d_model=2048 16H (GQA kv=16)
+d_ff=1408 (per expert) vocab=163840, MoE 64e top-6 (+2 shared experts).
+"""
+from repro.configs.base import ArchSpec, ModelConfig
+
+MODEL = ModelConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,
+    vocab_size=163840,
+    n_experts=64,
+    n_shared_experts=2,
+    top_k=6,
+)
+
+SPEC = ArchSpec(
+    model=MODEL,
+    source="hf:moonshotai/Moonlight-16B-A3B",
+    notes="EP: experts sharded over the model axis; long_500k skipped: full attention",
+)

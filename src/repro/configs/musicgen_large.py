@@ -1,0 +1,30 @@
+"""musicgen-large — decoder-only over EnCodec tokens (backbone only).
+
+[arXiv:2306.05284; hf]  48L d_model=2048 32H (GQA kv=32) d_ff=8192 vocab=2048.
+The EnCodec frontend is a STUB per the assignment: input_specs() provide
+precomputed frame embeddings (B, S, d_model).
+"""
+from repro.configs.base import ArchSpec, ModelConfig
+
+MODEL = ModelConfig(
+    name="musicgen-large",
+    family="dense",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=2048,
+    frontend="audio_frames",
+    pos_emb="learned",
+    norm="layernorm",
+    mlp="gelu",
+    max_seq_len=32768,
+)
+
+SPEC = ArchSpec(
+    model=MODEL,
+    source="arXiv:2306.05284",
+    notes="audio backbone; frontend stubbed (precomputed frame embeddings); "
+    "long_500k skipped: full attention",
+)

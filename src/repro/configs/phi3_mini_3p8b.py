@@ -1,0 +1,23 @@
+"""phi3-mini-3.8b — dense, RoPE + SwiGLU + GQA.
+
+[arXiv:2404.14219; unverified]  32L d_model=3072 32H (GQA kv=32) d_ff=8192
+vocab=32064.
+"""
+from repro.configs.base import ArchSpec, ModelConfig
+
+MODEL = ModelConfig(
+    name="phi3-mini-3.8b",
+    family="dense",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32064,
+)
+
+SPEC = ArchSpec(
+    model=MODEL,
+    source="arXiv:2404.14219 (unverified tier)",
+    notes="long_500k skipped: pure full attention (quadratic)",
+)

@@ -1,0 +1,24 @@
+"""qwen2-1.5b — dense GQA with QKV bias.
+
+[arXiv:2407.10671; hf]  28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936.
+"""
+from repro.configs.base import ArchSpec, ModelConfig
+
+MODEL = ModelConfig(
+    name="qwen2-1.5b",
+    family="dense",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,
+    d_ff=8960,
+    vocab_size=151936,
+    qkv_bias=True,
+    tie_embeddings=True,
+)
+
+SPEC = ArchSpec(
+    model=MODEL,
+    source="arXiv:2407.10671",
+    notes="long_500k skipped: pure full attention (quadratic)",
+)

@@ -1,0 +1,24 @@
+"""qwen3-32b — dense GQA with qk-norm.
+
+[hf:Qwen/Qwen3-8B family; hf]  64L d_model=5120 64H (GQA kv=8) d_ff=25600
+vocab=151936, qk_norm.
+"""
+from repro.configs.base import ArchSpec, ModelConfig
+
+MODEL = ModelConfig(
+    name="qwen3-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=25600,
+    vocab_size=151936,
+    qk_norm=True,
+)
+
+SPEC = ArchSpec(
+    model=MODEL,
+    source="hf:Qwen/Qwen3 family",
+    notes="largest dense cell; long_500k skipped: pure full attention",
+)

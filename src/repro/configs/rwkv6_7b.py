@@ -1,0 +1,25 @@
+"""rwkv6-7b (Finch) — attention-free, data-dependent decay.
+
+[arXiv:2404.05892; hf]  32L d_model=4096 (attn-free) d_ff=14336 vocab=65536.
+"""
+from repro.configs.base import ArchSpec, ModelConfig
+
+MODEL = ModelConfig(
+    name="rwkv6-7b",
+    family="rwkv",
+    n_layers=32,
+    d_model=4096,
+    n_heads=64,  # d_model / rwkv_head_dim
+    n_kv_heads=64,
+    d_ff=14336,
+    vocab_size=65536,
+    rwkv_head_dim=64,
+    norm="layernorm",
+)
+
+SPEC = ArchSpec(
+    model=MODEL,
+    source="arXiv:2404.05892",
+    notes="attention-free: decode state is O(1) per layer; long_500k runs "
+    "(the 500K 'cache' is a constant-size WKV state + token-shift buffers)",
+)

@@ -1,0 +1,24 @@
+"""smollm-360m — llama-architecture small dense model.
+
+[hf:HuggingFaceTB/SmolLM-360M; hf]  32L d_model=960 15H (GQA kv=5) d_ff=2560
+vocab=49152.
+"""
+from repro.configs.base import ArchSpec, ModelConfig
+
+MODEL = ModelConfig(
+    name="smollm-360m",
+    family="dense",
+    n_layers=32,
+    d_model=960,
+    n_heads=15,
+    n_kv_heads=5,
+    d_ff=2560,
+    vocab_size=49152,
+    tie_embeddings=True,
+)
+
+SPEC = ArchSpec(
+    model=MODEL,
+    source="hf:HuggingFaceTB/SmolLM-360M",
+    notes="long_500k skipped: pure full attention (quadratic)",
+)

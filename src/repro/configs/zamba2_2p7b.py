@@ -1,0 +1,29 @@
+"""zamba2-2.7b — hybrid Mamba-2 backbone + shared attention blocks.
+
+[arXiv:2411.15242; hf]  54L d_model=2560 32H (GQA kv=32) d_ff=10240 vocab=32000,
+ssm_state=64.  The shared attention+MLP block (one set of weights) is applied
+every `attn_every` SSM layers, each application with its own KV cache.
+"""
+from repro.configs.base import ArchSpec, ModelConfig
+
+MODEL = ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=10240,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    attn_every=6,  # 54 / 6 = 9 shared-block applications
+)
+
+SPEC = ArchSpec(
+    model=MODEL,
+    source="arXiv:2411.15242 (hf-verified)",
+    notes="hybrid: long_500k runs (sub-quadratic backbone; shared-attn KV caches "
+    "are sequence-sharded over the data axis)",
+)

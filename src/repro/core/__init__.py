@@ -1,0 +1,20 @@
+"""The paper's contribution: Sequence Length Warmup + its instrumentation."""
+from repro.core.batch_warmup import BatchWarmup  # noqa: F401
+from repro.core.curriculum import CurriculumState, SLWCurriculum  # noqa: F401
+from repro.core.pacing import (  # noqa: F401
+    bucket_ladder,
+    quantize,
+    raw_seqlen,
+    seqlen_at,
+)
+from repro.core.stability import (  # noqa: F401
+    LossRatioTracker,
+    momentum_stats,
+    pearson,
+    variance_stats,
+)
+from repro.core.tuning import (  # noqa: F401
+    TuneResult,
+    significant_fluctuation,
+    tune_slw,
+)

@@ -1,0 +1,42 @@
+"""GPT-3-style batch-size warmup — the related work the paper compares
+against (§5.1) and finds provides *no* stability benefit.
+
+Start at ``start_batch`` and grow linearly (in tokens) to the full batch over
+``warmup_tokens``.  The method's structural limitation discussed in the paper
+is enforced here: the batch must be a multiple of the data-parallel size, so
+on a large mesh the warmup is quantized coarsely (vs SLW's fixed "multiple of
+8/128" that is independent of the mesh).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.configs.base import BatchWarmupConfig
+
+
+@dataclass
+class BatchWarmup:
+    cfg: BatchWarmupConfig
+    full_batch: int
+    dp_size: int = 1  # the "multiple of data-parallel size" constraint
+
+    def batch_for_tokens(self, tokens_seen: int) -> int:
+        if not self.cfg.enabled:
+            return self.full_batch
+        frac = min(tokens_seen / max(self.cfg.warmup_tokens, 1), 1.0)
+        raw = self.cfg.start_batch + frac * (self.full_batch
+                                             - self.cfg.start_batch)
+        b = int(raw) - int(raw) % self.dp_size
+        return int(np.clip(b, max(self.cfg.start_batch, self.dp_size),
+                           self.full_batch))
+
+    def apply(self, batch: Dict[str, np.ndarray], tokens_seen: int
+              ) -> Tuple[Dict[str, np.ndarray], int]:
+        b = self.batch_for_tokens(tokens_seen)
+        out = {k: v[:b] for k, v in batch.items()}
+        first = next(iter(out.values()))
+        tokens = int(np.prod(first.shape[:2])) if first.ndim >= 2 else b
+        return out, tokens

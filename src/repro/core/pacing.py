@@ -1,0 +1,91 @@
+"""Pacing functions (paper Section 4) + TPU bucket quantization.
+
+The paper's pacing function is step-wise linear:
+
+    seqlen_t = seqlen_s + (seqlen_e - seqlen_s) * min(t / T, 1)
+
+with a post-processing ``seqlen_t -= seqlen_t mod 8`` for V100 tensor cores.
+Also implemented: the root variant (paper §4 item ii), the Shortformer
+discrete 2-stage schedule (the baseline §5.1 shows diverging at the switch),
+and a constant schedule.
+
+TPU adaptation: every distinct sequence length is an XLA recompilation, so
+the raw pacing value is quantized onto a bounded *bucket ladder* —
+geometric doubling from ``seqlen_s`` up to the rounding multiple, then
+arithmetic steps of the multiple, thinned to at most ``max_buckets`` values.
+jax.jit's shape-keyed executable cache then holds one compiled step per
+bucket.  The paper's eager implementation is the special case
+``round_multiple=8, max_buckets=big``.
+"""
+from __future__ import annotations
+
+import bisect
+import math
+from typing import List, Sequence, Tuple
+
+from repro.configs.base import SLWConfig
+
+
+def raw_seqlen(cfg: SLWConfig, step: int, full_len: int,
+               warmup_steps_hint: int = 0) -> float:
+    """Un-quantized pacing value at `step` (paper formulas)."""
+    s0 = cfg.start_seq_len
+    s1 = cfg.end_seq_len or full_len
+    T = cfg.duration_steps or max(2 * warmup_steps_hint, 1)
+    if not cfg.enabled or cfg.pacing == "constant":
+        return float(s1)
+    if cfg.pacing == "linear":
+        return s0 + (s1 - s0) * min(step / T, 1.0)
+    if cfg.pacing == "root":
+        return s0 + (s1 - s0) * min((step / T) ** (1.0 / cfg.root_degree), 1.0)
+    if cfg.pacing == "two_stage":  # Shortformer baseline
+        switch = cfg.two_stage_switch_step or T
+        return float(cfg.two_stage_short_len if step < switch else s1)
+    if cfg.pacing == "variance_gated":
+        # beyond-paper: driven by observed Adam variance-max; the curriculum
+        # controller owns the gate state and calls `raw_seqlen` only for the
+        # linear upper envelope.
+        return s0 + (s1 - s0) * min(step / T, 1.0)
+    raise ValueError(f"unknown pacing {cfg.pacing!r}")
+
+
+def bucket_ladder(cfg: SLWConfig, full_len: int) -> Tuple[int, ...]:
+    """Monotone ladder of allowed sequence lengths, |ladder| <= max_buckets."""
+    s0 = cfg.start_seq_len
+    s1 = cfg.end_seq_len or full_len
+    m = cfg.round_multiple
+    if not cfg.enabled:
+        return (s1,)
+    ladder: List[int] = []
+    # geometric sub-multiple region
+    v = s0
+    while v < min(m, s1):
+        ladder.append(v)
+        v *= 2
+    # arithmetic multiples of m
+    lo = max(m, s0 - s0 % m or m)
+    n_arith = max(1, (s1 - lo) // m + 1)
+    budget = max(1, cfg.max_buckets - len(ladder))
+    stride = max(1, math.ceil(n_arith / budget))
+    v = lo
+    while v < s1:
+        ladder.append(v)
+        v += stride * m
+    ladder.append(s1)
+    ladder = sorted(set(x for x in ladder if s0 <= x <= s1 or x == s1))
+    return tuple(ladder)
+
+
+def quantize(raw: float, ladder: Sequence[int]) -> int:
+    """Largest ladder value <= raw (paper's round-*down* semantics);
+    clamps to the smallest bucket."""
+    i = bisect.bisect_right(ladder, raw) - 1
+    return ladder[max(i, 0)]
+
+
+def seqlen_at(cfg: SLWConfig, step: int, full_len: int,
+              warmup_steps_hint: int = 0,
+              ladder: Sequence[int] = None) -> int:
+    if ladder is None:
+        ladder = bucket_ladder(cfg, full_len)
+    return quantize(raw_seqlen(cfg, step, full_len, warmup_steps_hint), ladder)

@@ -1,0 +1,107 @@
+"""Stability instrumentation from the paper's analysis (Section 3).
+
+* loss ratio  — current-step loss / min previous loss; >1.2 counts as a
+  spike (Table 1).
+* Adam variance telemetry — l1 norm and max element of sqrt(v_t) (Fig. 1
+  c–f), plus momentum l1 norm (A.3.2).
+* Pearson correlation between the loss-ratio series and the variance series
+  (Table 3), with the exact t-distribution p-value.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# loss-ratio tracking (host side)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class LossRatioTracker:
+    spike_threshold: float = 1.2
+    min_loss: float = float("inf")
+    max_ratio: float = 0.0
+    n_steps: int = 0
+    n_spikes: int = 0
+    ratios: List[float] = field(default_factory=list)
+
+    def update(self, loss: float) -> float:
+        """Returns the loss ratio for this step (1.0 on the first step)."""
+        ratio = loss / self.min_loss if np.isfinite(self.min_loss) else 1.0
+        self.ratios.append(ratio)
+        self.n_steps += 1
+        if ratio > self.spike_threshold:
+            self.n_spikes += 1
+        self.max_ratio = max(self.max_ratio, ratio)
+        self.min_loss = min(self.min_loss, loss)
+        return ratio
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "steps": self.n_steps,
+            "spikes": self.n_spikes,
+            "spike_frac": self.n_spikes / max(self.n_steps, 1),
+            "max_loss_ratio": self.max_ratio,
+        }
+
+    def state_dict(self) -> Dict[str, Any]:
+        return {"min_loss": self.min_loss, "max_ratio": self.max_ratio,
+                "n_steps": self.n_steps, "n_spikes": self.n_spikes,
+                "spike_threshold": self.spike_threshold}
+
+    def load_state_dict(self, d: Dict[str, Any]) -> None:
+        for k, v in d.items():
+            setattr(self, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Adam state telemetry (inside the jitted train step)
+# ---------------------------------------------------------------------------
+
+def variance_stats(v_tree: Any) -> Dict[str, jax.Array]:
+    """l1 norm and max element of sqrt(v_t) — the paper's Fig. 1 series.
+    (l1 to avoid outlier amplification, per the paper's footnote 5.)"""
+    leaves = [jnp.sqrt(x.astype(jnp.float32))
+              for x in jax.tree_util.tree_leaves(v_tree)]
+    l1 = sum(jnp.sum(x) for x in leaves)
+    mx = jnp.stack([jnp.max(x) for x in leaves]).max()
+    return {"var_l1": l1, "var_max": mx}
+
+
+def momentum_stats(m_tree: Any) -> Dict[str, jax.Array]:
+    leaves = [jnp.abs(x.astype(jnp.float32))
+              for x in jax.tree_util.tree_leaves(m_tree)]
+    return {"mom_l1": sum(jnp.sum(x) for x in leaves)}
+
+
+# ---------------------------------------------------------------------------
+# correlation analysis (Table 3)
+# ---------------------------------------------------------------------------
+
+def pearson(x: np.ndarray, y: np.ndarray) -> Tuple[float, float]:
+    """Pearson r + two-sided p-value via the exact t distribution
+    (regularized incomplete beta; no scipy dependency)."""
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    n = x.size
+    if n < 3:
+        return float("nan"), float("nan")
+    xc = x - x.mean()
+    yc = y - y.mean()
+    denom = np.sqrt((xc * xc).sum() * (yc * yc).sum())
+    if denom == 0:
+        return float("nan"), float("nan")
+    r = float(np.clip((xc * yc).sum() / denom, -1.0, 1.0))
+    df = n - 2
+    if abs(r) >= 1.0:
+        return r, 0.0
+    t2 = df * r * r / (1.0 - r * r)
+    # two-sided p = I_{df/(df+t^2)}(df/2, 1/2)
+    from jax.scipy.special import betainc
+    p = float(betainc(df / 2.0, 0.5, df / (df + t2)))
+    return r, p

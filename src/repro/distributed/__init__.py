@@ -1,0 +1,8 @@
+from repro.distributed.sharding import (  # noqa: F401
+    ACT_RULES,
+    PARAM_RULES,
+    ShardingRules,
+    constrain,
+    tree_param_shardings,
+    use_rules,
+)

@@ -1,0 +1,221 @@
+"""Logical-axis sharding: rules map logical axis names -> mesh axes.
+
+Params/activations/caches carry *logical* axis names (declared in the model
+ParamDef trees).  A rule set translates them to PartitionSpecs for whatever
+mesh is active — so moving from the single-pod (16,16) mesh to the multi-pod
+(2,16,16) mesh, or to an elastic restart with a different device count, is a
+rules/mesh change, not a model change.
+
+Two built-in rule sets:
+
+* ``baseline`` — paper-era Megatron-style DP+TP: params replicated over the
+  data axis, TP over ``model`` (vocab/heads/mlp/experts).
+* ``fsdp`` — optimized: baseline + params/optimizer sharded over ``data``
+  (ZeRO-3-style), which is what makes the 32B-scale cells fit.
+
+Conflict/divisibility fallback: if a logical axis maps to a mesh axis already
+used by an earlier dim of the same tensor, or the dim size is not divisible by
+the mesh axis size, that dim stays unsharded (recorded via `fallbacks`).
+This is what keeps e.g. smollm's 15 attention heads correct on a 16-way model
+axis (replicated attention weights, sharded everything else).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[str, Tuple[str, ...]]
+
+# logical axis -> mesh axis (or tuple of mesh axes) templates; axes absent
+# from the active mesh are dropped at resolution time.
+PARAM_RULES: Dict[str, Dict[str, MeshAxes]] = {
+    "baseline": {
+        "vocab": "model",
+        "mlp": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "experts": "model",
+        "ssm_heads": "model",
+        "ssm_inner": "model",
+        "rwkv_heads": "model",
+        "rwkv_inner": "model",
+    },
+    "fsdp": {
+        "vocab": "model",
+        "mlp": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "experts": "model",
+        "ssm_heads": "model",
+        "ssm_inner": "model",
+        "rwkv_heads": "model",
+        "rwkv_inner": "model",
+        "embed": "data",  # ZeRO-3-style: weights sharded over the data axis
+        "pos": "data",
+    },
+    # fsdp_pure: weights *stored* sharded over both axes (same as fsdp) but
+    # compute is pure data parallelism — the batch spreads over every mesh
+    # axis and layers run with gathered weights.  Trades per-layer weight
+    # all-gathers (small) for the removal of per-layer activation psums
+    # (large at big batch*seq) — §Perf lever for large dense training.
+    "fsdp_pure": {
+        "vocab": "model",
+        "mlp": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "experts": "model",
+        "ssm_heads": "model",
+        "ssm_inner": "model",
+        "rwkv_heads": "model",
+        "rwkv_inner": "model",
+        "embed": "data",
+        "pos": "data",
+    },
+    # serve_tp: inference layout — params replicated over `data` and
+    # TP-sharded over `model` only (no per-step FSDP weight gathers, the
+    # decode-path §Perf lever); the KV cache seq axis carries the memory.
+    "serve_tp": {
+        "vocab": "model",
+        "mlp": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "experts": "model",
+        "ssm_heads": "model",
+        "ssm_inner": "model",
+        "rwkv_heads": "model",
+        "rwkv_inner": "model",
+    },
+}
+
+ACT_RULES: Dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),
+    "heads": "model",
+    "kv_heads": "model",
+    "experts": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "ssm_heads": "model",
+    "ssm_inner": "model",
+    "rwkv_heads": "model",
+    "rwkv_inner": "model",
+}
+
+# fsdp_pure: batch over the whole mesh; no activation TP entries (weights
+# are gathered per layer instead)
+ACT_RULES_PURE: Dict[str, MeshAxes] = {
+    "batch": ("pod", "data", "model"),
+    "vocab": "model",
+}
+
+# long-context decode: KV caches additionally sharded along the sequence axis
+SEQ_SHARDED_CACHE_RULE = {"seq": "data"}
+
+
+@dataclass
+class ShardingRules:
+    mesh: Mesh
+    param_rules: Dict[str, MeshAxes]
+    act_rules: Dict[str, MeshAxes]
+    fallbacks: List[str] = field(default_factory=list)
+
+    @classmethod
+    def make(cls, mesh: Mesh, rule_set: str = "fsdp",
+             seq_sharded_cache: bool = False,
+             seq_shard_axis: str = "data") -> "ShardingRules":
+        act = dict(ACT_RULES_PURE if rule_set == "fsdp_pure" else ACT_RULES)
+        if seq_sharded_cache:
+            act["seq"] = seq_shard_axis
+        return cls(mesh=mesh, param_rules=dict(PARAM_RULES[rule_set]),
+                   act_rules=act)
+
+    # -- resolution --------------------------------------------------------
+    def _resolve(self, rules: Dict[str, MeshAxes], axes: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]], what: str) -> P:
+        mesh_axes = set(self.mesh.axis_names)
+        used: set = set()
+        out: List[Optional[MeshAxes]] = []
+        for i, name in enumerate(axes):
+            target = rules.get(name) if name else None
+            if target is None:
+                out.append(None)
+                continue
+            cand = tuple(a for a in (
+                (target,) if isinstance(target, str) else target)
+                if a in mesh_axes and a not in used)
+            if not cand:
+                out.append(None)
+                continue
+            if shape is not None:
+                size = int(np.prod([self.mesh.shape[a] for a in cand]))
+                if shape[i] % size != 0:
+                    # divisibility fallback: try prefix subsets
+                    while cand and shape[i] % int(
+                            np.prod([self.mesh.shape[a] for a in cand])) != 0:
+                        cand = cand[:-1]
+                    if not cand:
+                        self.fallbacks.append(
+                            f"{what}: dim {i} ({name}={shape[i]}) replicated")
+                        out.append(None)
+                        continue
+            used.update(cand)
+            out.append(cand[0] if len(cand) == 1 else cand)
+        return P(*out)
+
+    def param_spec(self, axes, shape=None) -> P:
+        return self._resolve(self.param_rules, axes, shape, "param")
+
+    def act_spec(self, axes, shape=None) -> P:
+        return self._resolve(self.act_rules, axes, shape, "act")
+
+    def param_sharding(self, axes, shape=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.param_spec(axes, shape))
+
+    def act_sharding(self, axes, shape=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.act_spec(axes, shape))
+
+
+def tree_param_shardings(rules: ShardingRules, axes_tree: Any,
+                         shape_tree: Any) -> Any:
+    """NamedSharding tree from a logical-axes tree + ShapeDtypeStruct tree."""
+    def one(axes, sds):
+        return rules.param_sharding(axes, sds.shape)
+    return jax.tree_util.tree_map(
+        one, axes_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x))
+
+
+# ---------------------------------------------------------------------------
+# activation constraints inside model code (no-op when no rules active)
+# ---------------------------------------------------------------------------
+
+_ACTIVE = threading.local()
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = getattr(_ACTIVE, "rules", None)
+    _ACTIVE.rules = rules
+    try:
+        yield
+    finally:
+        _ACTIVE.rules = prev
+
+
+def active_rules() -> Optional[ShardingRules]:
+    return getattr(_ACTIVE, "rules", None)
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint by logical axes; identity if no rules active."""
+    rules = active_rules()
+    if rules is None:
+        return x
+    spec = rules.act_spec(axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))

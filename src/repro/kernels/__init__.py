@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+public wrapper, interpret-mode fallback off-TPU), ref.py (pure-jnp oracle).
+
+* flash_attention — causal GQA flash attention (the B*L^2*H term SLW
+  modulates; skips above-diagonal blocks the XLA path pays for)
+* ssd             — Mamba-2 chunked SSD scan (zamba2 backbone, long_500k)
+* rwkv6           — chunked WKV with data-dependent per-channel decay
+"""
+from repro.kernels.flash_attention.ops import flash_attention  # noqa: F401
+from repro.kernels.rwkv6.ops import wkv6  # noqa: F401
+from repro.kernels.ssd.ops import ssd  # noqa: F401

@@ -1,0 +1,50 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Handles the model-facing layout (B, S, H, D) + GQA head grouping + padding
+to block multiples, and falls back to interpret mode off-TPU (this container
+is CPU: interpret=True executes the kernel body in Python for validation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """q: (B, S, H, D); k, v: (B, S, KV, D) with H = KV * G. Returns like q."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    # expand KV heads to match Q heads (GQA); layout to (B*H, S, D)
+    kx = jnp.repeat(k, g, axis=2)
+    vx = jnp.repeat(v, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = kx.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vf = vx.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    pad = (-s) % max(bq, bk)
+    if pad:
+        qf = jnp.pad(qf, ((0, 0), (0, pad), (0, 0)))
+        kf = jnp.pad(kf, ((0, 0), (0, pad), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0)))
+    out = flash_attention_fwd(qf, kf, vf, causal=causal, block_q=bq,
+                              block_k=bk, valid_len=s, interpret=interpret)
+    if pad:
+        out = out[:, :s, :]
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)

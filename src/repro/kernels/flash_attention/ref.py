@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_reference(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True) -> jax.Array:
+    """q, k, v: (BH, S, D). Dense softmax attention in fp32."""
+    bh, s, d = q.shape
+    scale = 1.0 / math.sqrt(d)
+    logits = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

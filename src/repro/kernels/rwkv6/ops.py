@@ -1,0 +1,20 @@
+"""jit'd wrapper for the WKV6 kernel (interpret fallback off-TPU)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rwkv6.kernel import wkv6_fwd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, log_w, u, *, chunk: int = 32, interpret: bool | None = None):
+    """r/k/v/log_w: (B, H, S, D); u: (H, D)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return wkv6_fwd(r, k, v, log_w, u, chunk=chunk, interpret=interpret)

@@ -1,0 +1,34 @@
+"""Oracle for the WKV6 kernel: the model's chunked reference
+(layout-adapted) plus a fully-sequential scan for double-checking."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.rwkv6 import wkv6_reference
+
+
+def wkv6_fwd_reference(r, k, v, log_w, u, *, chunk: int = 32):
+    """Same layout as kernel.wkv6_fwd: (B, H, S, D)."""
+    tr = lambda t: t.transpose(0, 2, 1, 3)  # -> (B,S,H,D)
+    y, state = wkv6_reference(tr(r), tr(k), tr(v), tr(log_w), u, chunk)
+    return tr(y), state
+
+
+def wkv6_sequential(r, k, v, log_w, u):
+    """Step-by-step recurrence (independent oracle for the chunked math)."""
+    b, h, s, d = r.shape
+    f32 = jnp.float32
+
+    def step(state, inp):
+        rt, kt, vt, lwt = inp  # (B,H,D)
+        bonus = jnp.einsum("bhd,hd,bhd->bh", rt, u.astype(f32), kt)
+        y = jnp.einsum("bhd,bhde->bhe", rt, state) + bonus[..., None] * vt
+        state = (jnp.exp(lwt)[..., None] * state
+                 + jnp.einsum("bhd,bhe->bhde", kt, vt))
+        return state, y
+
+    xs = tuple(jnp.moveaxis(t.astype(f32), 2, 0) for t in (r, k, v, log_w))
+    state0 = jnp.zeros((b, h, d, d), f32)
+    state, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 2).astype(r.dtype), state

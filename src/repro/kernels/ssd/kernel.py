@@ -1,0 +1,108 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked scan.
+
+Grid (B, H, n_chunks) with the chunk axis minor — TPU's sequential grid
+execution carries the (N, P) inter-chunk state in VMEM scratch, so the
+recurrence never round-trips HBM between chunks (the GPU implementation's
+equivalent trick is a separate state-passing kernel; on TPU the sequential
+grid makes it one kernel).  Per chunk the intra term is two MXU matmuls over
+a (Q, Q) decay-masked score tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref,
+                state_scr, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)      # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)    # (1, Q)
+    a = a_ref[0]                              # scalar negative decay coef
+    bq = b_ref[0].astype(jnp.float32)        # (Q, N)
+    cq = c_ref[0].astype(jnp.float32)        # (Q, N)
+
+    log_decay = dt[0] * a                    # (Q,)
+    cum = jnp.cumsum(log_decay)              # (Q,) inclusive
+    x_dt = x * dt[0][:, None]                # (Q, P)
+
+    # intra-chunk: (C B^T (.) decay) @ x_dt
+    scores = jax.lax.dot_general(cq, bq, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (Q,Q)
+    gap = cum[:, None] - cum[None, :]
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.exp(jnp.where(iota_i >= iota_j, gap, NEG_INF))
+    y = jax.lax.dot_general(scores * decay, x_dt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk: C_i exp(cum_i) @ state_prev
+    state = state_scr[...]                   # (N, P)
+    c_scaled = cq * jnp.exp(cum)[:, None]
+    y = y + jax.lax.dot_general(c_scaled, state, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    # state update: exp(cum_last) * state + sum_j exp(cum_last - cum_j) B_j x_dt_j
+    b_scaled = bq * jnp.exp(cum[-1] - cum)[:, None]  # (Q, N)
+    new_state = (jnp.exp(cum[-1]) * state
+                 + jax.lax.dot_general(b_scaled, x_dt,
+                                       (((0,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32))
+    state_scr[...] = new_state
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        state_out_ref[0, 0] = new_state
+
+
+def ssd_fwd(x: jax.Array, dt: jax.Array, a_coef: jax.Array, b_in: jax.Array,
+            c_in: jax.Array, *, chunk: int = 128,
+            interpret: bool = False):
+    """x: (B, H, S, P); dt: (B, H, S); a_coef: (H,); b_in/c_in: (B, S, N).
+    Returns (y (B,H,S,P), final_state (B,H,N,P))."""
+    b, h, s, p = x.shape
+    n = b_in.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, n_chunks=nc)
+    dt3 = dt.reshape(b, h, 1, s)  # keep last-two-dims tiling friendly
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, 1, chunk), lambda bi, hi, ci: (bi, hi, 0, ci)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, s, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, n, p), jnp.float32),
+        ],
+        scratch_shapes=[_vmem((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt3, a_coef.astype(jnp.float32), b_in, c_in)
+    return y, state
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,22 @@
+"""jit'd wrapper for the SSD kernel (interpret fallback off-TPU)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd.kernel import ssd_fwd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, a_coef, b_in, c_in, *, chunk: int = 128,
+        interpret: bool | None = None):
+    """x: (B, H, S, P); dt: (B, H, S); a_coef: (H,); b_in/c_in: (B, S, N)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return ssd_fwd(x, dt, a_coef, b_in, c_in, chunk=chunk,
+                   interpret=interpret)

@@ -1,0 +1,16 @@
+"""Oracle for the SSD kernel: the model's own chunked-scan reference
+(layout-adapted)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.mamba2 import ssd_reference
+
+
+def ssd_fwd_reference(x, dt, a_coef, b_in, c_in, *, chunk: int = 128):
+    """Same signature/layout as kernel.ssd_fwd: x (B,H,S,P), dt (B,H,S)."""
+    xs = x.transpose(0, 2, 1, 3)   # (B,S,H,P)
+    dts = dt.transpose(0, 2, 1)    # (B,S,H)
+    y, state = ssd_reference(xs, dts, a_coef, b_in, c_in, chunk)
+    return y.transpose(0, 2, 1, 3), state

@@ -1,0 +1,4 @@
+# launch layer: mesh / dryrun / train / serve.
+# NOTE: do not import dryrun here — it sets XLA_FLAGS at import time and must
+# only ever be imported as the very first thing in a fresh process.
+from repro.launch import mesh, steps  # noqa: F401

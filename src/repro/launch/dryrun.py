@@ -1,0 +1,413 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST run before any other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the production mesh ((16,16) "data","model" or (2,16,16)
+     "pod","data","model"),
+  2. resolves the sharding contract (param/opt/batch/cache NamedShardings)
+     from the logical-axis rules,
+  3. ``jax.jit(step, in_shardings, out_shardings).lower(**ShapeDtypeStructs)``
+     and ``.compile()`` — no real allocation anywhere,
+  4. records memory_analysis / cost_analysis / the collective schedule
+     (parsed from the compiled HLO) as a JSON record for the roofline.
+
+Failures here (sharding mismatch, OOM-scale temps, unsupported collective)
+are bugs in the system — the CI gate for "would this run on the real mesh".
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh single multi --out experiments/dryrun --skip-existing
+"""
+# (no `from __future__ import annotations` here: the XLA_FLAGS lines must be
+# the first statements in the module, which rules out __future__ imports.)
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+def _lower_step(cfg, shape, mesh, rules, remat: str, block_kv: int,
+                unroll_layers: bool = False):
+    """Build the step fn + sharding contract for a cell and lower it.
+    Returns the jax Lowered object."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs.base import OptimizerConfig
+    from repro.launch import steps as steps_lib
+    from repro.models import model_zoo
+
+    model = model_zoo.build_model(cfg, dtype=jnp.bfloat16, remat=remat,
+                                  block_kv=block_kv)
+    model.unroll_layers = unroll_layers
+    with mesh:
+        if shape.kind == "train":
+            step_fn = steps_lib.make_train_step(model, OptimizerConfig(),
+                                                rules)
+            state = steps_lib.abstract_train_state(cfg)
+            state_sh = steps_lib.train_state_shardings(rules, cfg)
+            batch = model_zoo.train_batch_specs(cfg, shape.global_batch,
+                                                shape.seq_len)
+            batch_sh = steps_lib.batch_shardings(rules, cfg, batch)
+            lr = jax.ShapeDtypeStruct((), jnp.float32)
+            return jax.jit(
+                step_fn,
+                in_shardings=(state_sh, batch_sh, None),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            ).lower(state, batch, lr)
+        if shape.kind == "prefill":
+            step_fn = steps_lib.make_prefill_step(model, rules)
+            params = model_zoo.abstract_params(cfg)
+            p_sh = steps_lib.train_state_shardings(rules, cfg)["params"]
+            batch = model_zoo.prefill_batch_specs(cfg, shape.global_batch,
+                                                  shape.seq_len)
+            batch_sh = steps_lib.batch_shardings(rules, cfg, batch)
+            cache_sh = steps_lib.cache_shardings(rules, model,
+                                                 shape.global_batch,
+                                                 shape.seq_len)
+            return jax.jit(
+                step_fn,
+                in_shardings=(p_sh, batch_sh),
+                out_shardings=(NamedSharding(mesh, P()), cache_sh),
+            ).lower(params, batch)
+        # decode
+        step_fn = steps_lib.make_serve_step(model, rules)
+        params = model_zoo.abstract_params(cfg)
+        p_sh = steps_lib.train_state_shardings(rules, cfg)["params"]
+        cache = model.cache_shapes(shape.global_batch, shape.seq_len)
+        cache_sh = steps_lib.cache_shardings(rules, model,
+                                             shape.global_batch,
+                                             shape.seq_len)
+        tokens = model_zoo.decode_token_specs(shape.global_batch)
+        tok_sh = steps_lib.batch_shardings(
+            rules, cfg, {"tokens": tokens})["tokens"]
+        return jax.jit(
+            step_fn,
+            in_shardings=(p_sh, cache_sh, tok_sh),
+            out_shardings=(NamedSharding(mesh, P()), cache_sh),
+            donate_argnums=(1,),
+        ).lower(params, cache, tokens)
+
+
+def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
+             rule_set: str = "fsdp", remat: str = "full",
+             block_kv: int = 512, seq_shard: str = "auto",
+             moe_dispatch: str = "") -> Dict:
+    """Lower+compile one cell; returns the JSON record."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch
+    from repro.distributed.sharding import ShardingRules
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import model_zoo
+    from repro.roofline import analysis as roofline
+
+    spec = get_arch(arch_name)
+    shape = spec.shape(shape_name)
+    cfg = spec.model
+    if moe_dispatch:
+        cfg = cfg.replace(moe_dispatch=moe_dispatch)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = int(np.prod(list(mesh.shape.values())))
+    if seq_shard == "auto":
+        seq_sharded, seq_axis = shape.name == "long_500k", "data"
+    else:
+        seq_sharded, seq_axis = seq_shard != "none", seq_shard if seq_shard != "none" else "data"
+    rules = ShardingRules.make(mesh, rule_set, seq_sharded_cache=seq_sharded,
+                               seq_shard_axis=seq_axis)
+    record: Dict = {
+        "arch": arch_name, "shape": shape_name, "mesh": mesh_kind,
+        "kind": shape.kind, "chips": chips, "rule_set": rule_set,
+        "remat": remat, "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch, "seq_shard": seq_shard,
+        "moe_dispatch": moe_dispatch or cfg.moe_dispatch,
+    }
+
+    t0 = time.time()
+    lowered = _lower_step(cfg, shape, mesh, rules, remat, block_kv)
+    record["lower_s"] = time.time() - t0
+    t1 = time.time()
+    with mesh:
+        compiled = lowered.compile()
+    record["compile_s"] = time.time() - t1
+
+    # --- analysis artifacts -------------------------------------------------
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    record["cost"] = {k: float(v) for k, v in cost.items()
+                      if isinstance(v, (int, float)) and k in
+                      ("flops", "bytes accessed", "transcendentals",
+                       "utilization")}
+    try:
+        mem = compiled.memory_analysis()
+        record["memory"] = {
+            "per_device_bytes": float(
+                getattr(mem, "temp_size_in_bytes", 0)
+                + getattr(mem, "argument_size_in_bytes", 0)),
+            "temp_bytes": float(getattr(mem, "temp_size_in_bytes", 0)),
+            "argument_bytes": float(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": float(getattr(mem, "output_size_in_bytes", 0)),
+            "generated_code_bytes": float(
+                getattr(mem, "generated_code_size_in_bytes", 0)),
+        }
+    except Exception as e:  # noqa: BLE001
+        record["memory"] = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    record["collectives"] = roofline.parse_collectives(hlo, chips)
+    record["hlo_lines"] = hlo.count("\n")
+
+    record["params_total"] = model_zoo.param_count(cfg)
+    record["params_active"] = model_zoo.active_param_count(cfg)
+    record["model_flops"] = roofline.model_flops(
+        cfg, shape.kind, shape.global_batch, shape.seq_len,
+        record["params_active"])
+    record["sharding_fallbacks"] = rules.fallbacks
+    return record
+
+
+def _collective_wire_bytes(compiled, chips: int) -> Dict[str, float]:
+    """Per-device wire bytes by collective kind (post-SPMD shapes)."""
+    from repro.roofline import analysis as roofline
+    from repro.roofline import hw
+    out: Dict[str, float] = {}
+    for c in roofline.parse_collectives(compiled.as_text(), chips):
+        w = hw.wire_bytes(c["kind"], c["result_bytes"], c["group"])
+        out[c["kind"]] = out.get(c["kind"], 0.0) + w
+    return out
+
+
+def measure_cell(arch_name: str, shape_name: str, mesh_kind: str = "single",
+                 rule_set: str = "fsdp", remat: str = "full",
+                 block_kv: int = 512, seq_shard: str = "auto",
+                 moe_dispatch: str = "") -> Dict:
+    """Roofline measurement for one cell.
+
+    XLA's cost_analysis counts while-loop bodies once, so the full-config
+    compile (run_cell) cannot give per-step FLOPs/collective bytes directly.
+    This combines:
+      * exact global FLOPs / estimated HBM bytes from a scan-aware jaxpr
+        analysis of the very step function the dry-run lowers, and
+      * per-layer collective wire bytes measured on *unrolled* reduced-depth
+        compiles (2 and 4 layers; hybrid uses three (n_layers, attn_every)
+        points to separate the Mamba and shared-attention marginals),
+        linearly extrapolated to the full depth.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch
+    from repro.configs.base import OptimizerConfig
+    from repro.distributed.sharding import ShardingRules
+    from repro.launch import steps as steps_lib
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import model_zoo
+    from repro.roofline import analysis as roofline
+    from repro.roofline.jaxpr_cost import analyze_fn
+
+    spec = get_arch(arch_name)
+    shape = spec.shape(shape_name)
+    cfg = spec.model
+    if moe_dispatch:
+        cfg = cfg.replace(moe_dispatch=moe_dispatch)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = int(np.prod(list(mesh.shape.values())))
+    if seq_shard == "auto":
+        seq_sharded, seq_axis = shape.name == "long_500k", "data"
+    else:
+        seq_sharded, seq_axis = seq_shard != "none", seq_shard if seq_shard != "none" else "data"
+    record: Dict = {"arch": arch_name, "shape": shape_name,
+                    "mesh": mesh_kind, "kind": shape.kind, "chips": chips,
+                    "rule_set": rule_set, "remat": remat,
+                    "seq_shard": seq_shard,
+                    "moe_dispatch": moe_dispatch or cfg.moe_dispatch}
+
+    # --- 1. exact global flops/bytes from the traced jaxpr -----------------
+    model = model_zoo.build_model(cfg, dtype=jnp.bfloat16, remat=remat,
+                                  block_kv=block_kv)
+    t0 = time.time()
+    if shape.kind == "train":
+        fn = steps_lib.make_train_step(model, OptimizerConfig(), None)
+        state = steps_lib.abstract_train_state(cfg)
+        batch = model_zoo.train_batch_specs(cfg, shape.global_batch,
+                                            shape.seq_len)
+        cost = analyze_fn(fn, state, batch,
+                          jax.ShapeDtypeStruct((), jnp.float32))
+    elif shape.kind == "prefill":
+        fn = steps_lib.make_prefill_step(model, None)
+        batch = model_zoo.prefill_batch_specs(cfg, shape.global_batch,
+                                              shape.seq_len)
+        cost = analyze_fn(fn, model_zoo.abstract_params(cfg), batch)
+    else:
+        fn = steps_lib.make_serve_step(model, None)
+        cache = model.cache_shapes(shape.global_batch, shape.seq_len)
+        tokens = model_zoo.decode_token_specs(shape.global_batch)
+        cost = analyze_fn(fn, model_zoo.abstract_params(cfg), cache, tokens)
+    record["jaxpr_flops_global"] = cost.flops
+    record["jaxpr_bytes_global"] = cost.bytes
+    record["jaxpr_flops_by_prim"] = {
+        k: v for k, v in sorted(cost.by_prim.items(),
+                                key=lambda kv: -kv[1])[:8]}
+    record["trace_s"] = time.time() - t0
+
+    # --- 2. collective wire bytes via unrolled-depth extrapolation ---------
+    rules_points = []
+    if cfg.family == "hybrid":
+        points = [{"n_layers": 2, "attn_every": 2},
+                  {"n_layers": 4, "attn_every": 2},
+                  {"n_layers": 2, "attn_every": 1}]
+    else:
+        points = [{"n_layers": 2}, {"n_layers": 4}]
+    measures = []
+    t1 = time.time()
+    for pt in points:
+        cfg_small = cfg.replace(**pt)
+        rules = ShardingRules.make(mesh, rule_set,
+                                   seq_sharded_cache=seq_sharded,
+                                   seq_shard_axis=seq_axis)
+        lowered = _lower_step(cfg_small, shape, mesh, rules, remat, block_kv,
+                              unroll_layers=True)
+        with mesh:
+            compiled = lowered.compile()
+        measures.append(_collective_wire_bytes(compiled, chips))
+        rules_points.append(pt)
+    record["collective_points"] = [
+        {"point": p, "wire_bytes": m} for p, m in zip(rules_points, measures)]
+    record["collective_compile_s"] = time.time() - t1
+
+    kinds = sorted({k for m in measures for k in m})
+    extrap: Dict[str, float] = {}
+    if cfg.family == "hybrid":
+        g_full = cfg.n_layers // cfg.attn_every  # attn applications
+        for k in kinds:
+            m1 = measures[0].get(k, 0.0)  # C + 2x + 1y
+            m2 = measures[1].get(k, 0.0)  # C + 4x + 2y
+            m3 = measures[2].get(k, 0.0)  # C + 2x + 2y
+            y = m3 - m1
+            x = (m2 - m1 - y) / 2.0
+            c0 = m1 - 2 * x - y
+            extrap[k] = max(c0 + cfg.n_layers * x + g_full * y, 0.0)
+    else:
+        for k in kinds:
+            m1, m2 = measures[0].get(k, 0.0), measures[1].get(k, 0.0)
+            marg = (m2 - m1) / 2.0
+            c0 = m1 - 2 * marg
+            extrap[k] = max(c0 + cfg.n_layers * marg, 0.0)
+    record["collective_wire_bytes_per_device"] = extrap
+    record["collective_wire_total"] = sum(extrap.values())
+
+    record["params_total"] = model_zoo.param_count(cfg)
+    record["params_active"] = model_zoo.active_param_count(cfg)
+    record["model_flops"] = roofline.model_flops(
+        cfg, shape.kind, shape.global_batch, shape.seq_len,
+        record["params_active"])
+    return record
+
+
+def cell_path(out_dir: str, arch: str, shape: str, mesh_kind: str,
+              tag: str = "") -> str:
+    suffix = f".{tag}" if tag else ""
+    return os.path.join(out_dir, f"{arch}__{shape}__{mesh_kind}{suffix}.json")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--arch", nargs="+", default=["all"])
+    parser.add_argument("--shape", nargs="+", default=["all"])
+    parser.add_argument("--mesh", nargs="+", default=["single", "multi"],
+                        choices=["single", "multi"])
+    parser.add_argument("--rules", default="fsdp",
+                        choices=["fsdp", "baseline", "fsdp_pure", "serve_tp"])
+    parser.add_argument("--remat", default="full",
+                        choices=["full", "dots", "none"])
+    parser.add_argument("--block-kv", type=int, default=512)
+    parser.add_argument("--out", default="experiments/dryrun")
+    parser.add_argument("--tag", default="",
+                        help="suffix for perf-iteration variants")
+    parser.add_argument("--skip-existing", action="store_true")
+    parser.add_argument("--moe-dispatch", default="",
+                        choices=["", "global", "row_local"])
+    parser.add_argument("--seq-shard", default="auto",
+                        choices=["auto", "none", "data", "model"],
+                        help="KV-cache sequence-axis sharding (auto: data "
+                        "for long_500k only)")
+    parser.add_argument("--measure", action="store_true",
+                        help="roofline measurement mode (jaxpr flops + "
+                        "unrolled-depth collective extrapolation); writes "
+                        "<cell>.measure[.tag].json")
+    args = parser.parse_args(argv)
+
+    from repro.configs import ASSIGNED, get_arch
+
+    archs = (list(ASSIGNED) if args.arch == ["all"] else args.arch)
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch_name in archs:
+        spec = get_arch(arch_name)
+        shapes = ([s.name for s in spec.runnable_shapes()]
+                  if args.shape == ["all"] else args.shape)
+        for shape_name in shapes:
+            if shape_name not in [s.name for s in spec.runnable_shapes()]:
+                print(f"SKIP {arch_name} x {shape_name} (documented skip)")
+                continue
+            for mesh_kind in args.mesh:
+                tag = (("measure." if args.measure else "") + args.tag
+                       ).rstrip(".")
+                path = cell_path(args.out, arch_name, shape_name, mesh_kind,
+                                 tag)
+                if args.skip_existing and os.path.exists(path):
+                    print(f"CACHED {path}")
+                    continue
+                label = f"{arch_name} x {shape_name} x {mesh_kind}"
+                print(f"RUN {label} ...", flush=True)
+                try:
+                    if args.measure:
+                        rec = measure_cell(arch_name, shape_name, mesh_kind,
+                                           rule_set=args.rules,
+                                           remat=args.remat,
+                                           block_kv=args.block_kv,
+                                           seq_shard=args.seq_shard,
+                                           moe_dispatch=args.moe_dispatch)
+                        with open(path, "w") as f:
+                            json.dump(rec, f, indent=1)
+                        print(f"OK  {label}: jaxpr_flops="
+                              f"{rec['jaxpr_flops_global']:.3e} "
+                              f"coll/dev={rec['collective_wire_total']:.3e}B",
+                              flush=True)
+                    else:
+                        rec = run_cell(arch_name, shape_name, mesh_kind,
+                                       rule_set=args.rules, remat=args.remat,
+                                       block_kv=args.block_kv,
+                                       seq_shard=args.seq_shard,
+                                       moe_dispatch=args.moe_dispatch)
+                        with open(path, "w") as f:
+                            json.dump(rec, f, indent=1)
+                        print(f"OK  {label}: compile={rec['compile_s']:.1f}s "
+                              f"flops/dev={rec['cost'].get('flops', 0):.3e} "
+                              f"hlo_lines={rec['hlo_lines']}", flush=True)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((label, str(e)))
+                    traceback.print_exc()
+                    print(f"FAIL {label}: {e}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for label, err in failures:
+            print(f"  {label}: {err[:200]}")
+        return 1
+    print("\nall cells compiled OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

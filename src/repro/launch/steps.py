@@ -1,0 +1,109 @@
+"""Step builders: train / prefill / decode (serve) steps + their shardings.
+
+One place defines (a) the jitted step functions and (b) the full sharding
+contract (state / batch / cache NamedShardings) so the dry-run, the trainer
+and the tests all lower the same computation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, OptimizerConfig
+from repro.distributed.sharding import ShardingRules, use_rules
+from repro.models import model_zoo
+from repro.optim import adam
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(model, opt_cfg: OptimizerConfig,
+                    rules: Optional[ShardingRules] = None):
+    def train_step(state, batch, lr):
+        with use_rules(rules):
+            def loss_fn(p):
+                return model.loss(p, batch)
+
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state["params"])
+            grads, gnorm = adam.clip_by_global_norm(grads, opt_cfg.grad_clip)
+            new_params, new_opt, telemetry = adam.adamw_update(
+                state["params"], grads, state["opt"], lr, opt_cfg)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        out = {**metrics, **telemetry, "grad_norm": gnorm, "lr": lr}
+        return new_state, out
+
+    return train_step
+
+
+def make_prefill_step(model, rules: Optional[ShardingRules] = None):
+    def prefill_step(params, batch):
+        with use_rules(rules):
+            return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_serve_step(model, rules: Optional[ShardingRules] = None):
+    def serve_step(params, cache, tokens):
+        with use_rules(rules):
+            return model.decode(params, cache, tokens)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# abstract state + sharding trees
+# ---------------------------------------------------------------------------
+
+def abstract_train_state(cfg: ModelConfig) -> Dict[str, Any]:
+    params = model_zoo.abstract_params(cfg)
+    return {"params": params, "opt": adam.abstract_opt_state(params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def init_train_state(rng, cfg: ModelConfig) -> Dict[str, Any]:
+    params = model_zoo.init_params(rng, cfg)
+    return {"params": params, "opt": adam.init_opt_state(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _shard_tree(rules: ShardingRules, axes_tree, shape_tree, kind: str):
+    is_axes_leaf = lambda x: x is None or (
+        isinstance(x, tuple) and all(isinstance(a, (str, type(None)))
+                                     for a in x))
+
+    def one(axes, sds):
+        spec = (rules.param_spec(axes, sds.shape) if kind == "param"
+                else rules.act_spec(axes, sds.shape))
+        return NamedSharding(rules.mesh, spec)
+
+    return jax.tree_util.tree_map(one, axes_tree, shape_tree,
+                                  is_leaf=is_axes_leaf)
+
+
+def train_state_shardings(rules: ShardingRules, cfg: ModelConfig):
+    axes = model_zoo.param_axes(cfg)
+    shapes = model_zoo.abstract_params(cfg)
+    p_sh = _shard_tree(rules, axes, shapes, "param")
+    replicated = NamedSharding(rules.mesh, P())
+    return {"params": p_sh,
+            "opt": {"m": p_sh, "v": p_sh, "count": replicated},
+            "step": replicated}
+
+
+def batch_shardings(rules: ShardingRules, cfg: ModelConfig, specs):
+    axes = model_zoo.batch_logical_axes(cfg)
+    axes = {k: v for k, v in axes.items() if k in specs}
+    return _shard_tree(rules, axes, specs, "act")
+
+
+def cache_shardings(rules: ShardingRules, model, batch_size: int,
+                    seq_len: int):
+    axes = model.cache_axes()
+    shapes = model.cache_shapes(batch_size, seq_len)
+    return _shard_tree(rules, axes, shapes, "act")

@@ -1,0 +1,286 @@
+"""End-to-end trainer: SLW curriculum + token-wise LR + fault tolerance.
+
+Usable as a library (`train(cfg, ...)` — the benchmarks drive tiny replicas
+of the paper's experiments through this exact loop) and as a CLI:
+
+  PYTHONPATH=src python -m repro.launch.train --arch gpt2-117m --reduced \
+      --steps 200 --batch 16 --seq 256 --slw --duration 100
+
+The loop is the paper's recipe end to end:
+  batch (full length, pre-indexed) -> curriculum truncate/repack ->
+  token-wise LR -> jitted train step (one executable per seqlen bucket) ->
+  loss-ratio + Adam-variance telemetry -> token-budget termination,
+with checkpoint/restart, drain-on-signal and a straggler watchdog wrapped
+around it.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, reduced as reduce_cfg
+from repro.configs.base import (
+    BatchWarmupConfig, ModelConfig, OptimizerConfig, SLWConfig, TrainConfig)
+from repro.core import BatchWarmup, LossRatioTracker, SLWCurriculum
+from repro.checkpoint import CheckpointManager
+from repro.data import DataPipeline, SyntheticCorpus
+from repro.distributed.fault_tolerance import DrainSignal, StepWatchdog
+from repro.launch import steps as steps_lib
+from repro.models import model_zoo
+from repro.optim import lr_at
+
+
+@dataclass
+class TrainResult:
+    steps: int = 0
+    tokens: int = 0
+    diverged: bool = False
+    drained: bool = False
+    wall_time_s: float = 0.0
+    loss_history: List[float] = field(default_factory=list)
+    lr_history: List[float] = field(default_factory=list)
+    seqlen_history: List[int] = field(default_factory=list)
+    var_max_history: List[float] = field(default_factory=list)
+    var_l1_history: List[float] = field(default_factory=list)
+    grad_norm_history: List[float] = field(default_factory=list)
+    val_ppl_history: List[Tuple[int, float]] = field(default_factory=list)
+    tracker_summary: Dict[str, float] = field(default_factory=dict)
+    watchdog_summary: Dict[str, float] = field(default_factory=dict)
+    n_compiles: int = 0
+    restored_from_step: Optional[int] = None
+
+    @property
+    def loss_ratios(self) -> List[float]:
+        return self._ratios
+
+    _ratios: List[float] = field(default_factory=list)
+
+
+def train(tc: TrainConfig,
+          max_steps: Optional[int] = None,
+          eval_batch: int = 8,
+          resume: bool = False,
+          stop_on_nan: bool = True,
+          drain: Optional[DrainSignal] = None,
+          callback: Optional[Callable[[int, Dict[str, float]], None]] = None,
+          fail_at_step: Optional[int] = None,
+          quiet: bool = True) -> TrainResult:
+    """Run the training loop on the local device(s). Returns full telemetry.
+
+    `fail_at_step` injects a crash (fault-tolerance tests/drills).
+    """
+    cfg = tc.model
+    opt_cfg = tc.optimizer
+    model = model_zoo.build_model(cfg, dtype=jnp.float32, remat=tc.remat)
+    rng = jax.random.PRNGKey(tc.seed)
+    state = steps_lib.init_train_state(rng, cfg)
+
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seq_len=tc.seq_len,
+                             seed=tc.seed)
+    pipeline = DataPipeline(corpus, tc.global_batch, model_cfg=cfg)
+    curriculum = SLWCurriculum(tc.slw, tc.seq_len,
+                               warmup_steps_hint=opt_cfg.warmup_steps,
+                               prefix_tokens=cfg.prefix_tokens)
+    bwarm = BatchWarmup(tc.batch_warmup, tc.global_batch)
+    tracker = LossRatioTracker()
+    watchdog = StepWatchdog()
+    ckpt = (CheckpointManager(tc.checkpoint_dir, tc.keep_checkpoints)
+            if tc.checkpoint_dir else None)
+
+    step_fn = jax.jit(steps_lib.make_train_step(model, opt_cfg),
+                      donate_argnums=(0,))
+    eval_fn = jax.jit(lambda p, b: model.loss(p, b)[1]["loss"])
+
+    result = TrainResult()
+    step, tokens_seen = 0, 0
+
+    if resume and ckpt is not None:
+        like = steps_lib.abstract_train_state(cfg)
+        got_step, got_state, host = ckpt.restore_latest(like)
+        if got_step is not None:
+            state = got_state
+            step = host["step"]
+            tokens_seen = host["tokens_seen"]
+            curriculum.load_state_dict(host["curriculum"])
+            tracker.load_state_dict(host["tracker"])
+            result.restored_from_step = got_step
+
+    def save_checkpoint():
+        if ckpt is None:
+            return
+        host = {"step": step, "tokens_seen": tokens_seen,
+                "curriculum": curriculum.state_dict(),
+                "tracker": tracker.state_dict()}
+        ckpt.save(step, state, host)
+
+    total_steps = opt_cfg.total_steps or 10**9
+    total_tokens = opt_cfg.total_tokens or 10**18
+    if max_steps is not None:
+        total_steps = min(total_steps, step + max_steps)
+
+    seen_shapes = set()
+    t_start = time.time()
+    while step < total_steps and tokens_seen < total_tokens:
+        if drain is not None and drain.should_drain:
+            save_checkpoint()
+            result.drained = True
+            break
+        if fail_at_step is not None and step == fail_at_step:
+            raise RuntimeError(f"injected failure at step {step}")
+
+        watchdog.start()
+        batch = pipeline.batch_at(step)
+        if tc.slw.enabled:
+            batch, tokens_step = curriculum.apply(batch)
+        elif tc.batch_warmup.enabled:
+            batch, tokens_step = bwarm.apply(batch, tokens_seen)
+        else:
+            tokens_step = int(np.prod(batch["tokens"].shape[:2])) \
+                if "tokens" in batch else int(
+                    np.prod(next(iter(batch.values())).shape[:2]))
+
+        lr = lr_at(opt_cfg, step, tokens_seen)
+        shape_key = tuple(sorted((k, v.shape) for k, v in batch.items()))
+        if shape_key not in seen_shapes:
+            seen_shapes.add(shape_key)
+            result.n_compiles += 1
+        state, metrics = step_fn(state, batch, np.float32(lr))
+        loss = float(metrics["loss"])
+        var_max = float(metrics["var_max"])
+
+        ratio = tracker.update(loss) if math.isfinite(loss) else float("inf")
+        result._ratios.append(ratio)
+        result.loss_history.append(loss)
+        result.lr_history.append(lr)
+        result.seqlen_history.append(
+            curriculum.seqlen_for_step() if tc.slw.enabled else tc.seq_len)
+        result.var_max_history.append(var_max)
+        result.var_l1_history.append(float(metrics["var_l1"]))
+        result.grad_norm_history.append(float(metrics["grad_norm"]))
+        if callback is not None:
+            callback(step, {k: float(v) for k, v in metrics.items()})
+
+        if tc.slw.enabled:
+            if tc.slw.pacing == "variance_gated" and math.isfinite(var_max):
+                curriculum.observe(var_max)
+            curriculum.step_complete(tokens_step)
+        tokens_seen += tokens_step
+        step += 1
+        watchdog.stop()
+
+        if not math.isfinite(loss):
+            result.diverged = True
+            if stop_on_nan:
+                break
+
+        if tc.eval_interval and step % tc.eval_interval == 0:
+            ev = pipeline.eval_batch(step // tc.eval_interval, eval_batch)
+            ppl = float(np.exp(min(float(eval_fn(state["params"], ev)), 30.0)))
+            result.val_ppl_history.append((step, ppl))
+            if not quiet:
+                print(f"step {step} tokens {tokens_seen} loss {loss:.4f} "
+                      f"val_ppl {ppl:.2f} seqlen "
+                      f"{result.seqlen_history[-1]} lr {lr:.2e}", flush=True)
+
+        if ckpt is not None and tc.checkpoint_interval and \
+                step % tc.checkpoint_interval == 0:
+            save_checkpoint()
+
+    if ckpt is not None and not result.drained:
+        save_checkpoint()
+    result.steps = step
+    result.tokens = tokens_seen
+    result.wall_time_s = time.time() - t_start
+    result.tracker_summary = tracker.summary()
+    result.watchdog_summary = watchdog.summary()
+    return result
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def build_config(args) -> TrainConfig:
+    spec = get_arch(args.arch)
+    cfg = reduce_cfg(spec.model) if args.reduced else spec.model
+    if args.vocab:
+        cfg = cfg.replace(vocab_size=args.vocab)
+    slw = SLWConfig(
+        enabled=args.slw, pacing=args.pacing, start_seq_len=args.start_seq,
+        duration_steps=args.duration, round_multiple=args.round_multiple,
+        mode=args.slw_mode, max_buckets=args.max_buckets)
+    opt = OptimizerConfig(
+        lr=args.lr, min_lr=args.min_lr, warmup_steps=args.warmup,
+        warmup_tokens=args.warmup * args.batch * args.seq,
+        total_steps=args.steps,
+        total_tokens=args.tokens or args.steps * args.batch * args.seq,
+        schedule=args.schedule, grad_clip=args.clip)
+    bw = BatchWarmupConfig(enabled=args.batch_warmup,
+                           start_batch=max(args.batch // 8, 1),
+                           warmup_tokens=(args.tokens or args.steps
+                                          * args.batch * args.seq) // 20)
+    return TrainConfig(model=cfg, optimizer=opt, slw=slw, batch_warmup=bw,
+                       seq_len=args.seq, global_batch=args.batch,
+                       seed=args.seed, remat=args.remat,
+                       eval_interval=args.eval_interval,
+                       checkpoint_interval=args.ckpt_interval,
+                       checkpoint_dir=args.ckpt_dir)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default="gpt2-117m")
+    p.add_argument("--reduced", action="store_true",
+                   help="reduced same-family config (CPU-trainable)")
+    p.add_argument("--steps", type=int, default=200)
+    p.add_argument("--tokens", type=int, default=0)
+    p.add_argument("--batch", type=int, default=16)
+    p.add_argument("--seq", type=int, default=256)
+    p.add_argument("--vocab", type=int, default=0)
+    p.add_argument("--lr", type=float, default=6e-4)
+    p.add_argument("--min-lr", type=float, default=1e-5)
+    p.add_argument("--warmup", type=int, default=20)
+    p.add_argument("--clip", type=float, default=1.0)
+    p.add_argument("--schedule", default="token_cosine",
+                   choices=["token_cosine", "step_cosine", "constant"])
+    p.add_argument("--slw", action="store_true")
+    p.add_argument("--pacing", default="linear",
+                   choices=["linear", "root", "two_stage", "variance_gated",
+                            "constant"])
+    p.add_argument("--start-seq", type=int, default=8)
+    p.add_argument("--duration", type=int, default=0)
+    p.add_argument("--round-multiple", type=int, default=8)
+    p.add_argument("--max-buckets", type=int, default=16)
+    p.add_argument("--slw-mode", default="truncate",
+                   choices=["truncate", "repack"])
+    p.add_argument("--batch-warmup", action="store_true")
+    p.add_argument("--remat", default="none",
+                   choices=["none", "full", "dots"])
+    p.add_argument("--seed", type=int, default=1234)
+    p.add_argument("--eval-interval", type=int, default=50)
+    p.add_argument("--ckpt-dir", default="")
+    p.add_argument("--ckpt-interval", type=int, default=100)
+    p.add_argument("--resume", action="store_true")
+    args = p.parse_args(argv)
+
+    tc = build_config(args)
+    drain = DrainSignal()
+    res = train(tc, resume=args.resume, drain=drain, quiet=False)
+    print(f"\ndone: steps={res.steps} tokens={res.tokens} "
+          f"diverged={res.diverged} compiles={res.n_compiles}")
+    print("stability:", res.tracker_summary)
+    print("watchdog:", res.watchdog_summary)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

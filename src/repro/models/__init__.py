@@ -1,0 +1,14 @@
+from repro.models.model_zoo import (  # noqa: F401
+    abstract_params,
+    active_param_count,
+    batch_logical_axes,
+    build_model,
+    decode_token_specs,
+    init_params,
+    make_train_batch,
+    model_defs,
+    param_axes,
+    param_count,
+    prefill_batch_specs,
+    train_batch_specs,
+)

@@ -1,0 +1,146 @@
+"""GQA attention: blockwise online-softmax (train/prefill) + cached decode.
+
+The blockwise path keeps peak memory at O(S * block) instead of O(S^2) — the
+TPU-native replacement for "the GPU kernel would have streamed KV" — and is
+also the pure-jnp oracle for the Pallas flash-attention kernel
+(`repro.kernels.flash_attention`).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamDef, apply_rope, rms_norm
+
+NEG_INF = -1e30
+
+
+def attention_def(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    s = 1.0 / math.sqrt(d)
+    s_o = 1.0 / math.sqrt(h * hd)
+    defs = {
+        "wq": ParamDef((d, h, hd), ("embed", "heads", "head_dim"), "normal", s),
+        "wk": ParamDef((d, kv, hd), ("embed", "kv_heads", "head_dim"), "normal", s),
+        "wv": ParamDef((d, kv, hd), ("embed", "kv_heads", "head_dim"), "normal", s),
+        "wo": ParamDef((h, hd, d), ("heads", "head_dim", "embed"), "normal", s_o),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((h, hd), ("heads", "head_dim"), "zeros")
+        defs["bk"] = ParamDef((kv, hd), ("kv_heads", "head_dim"), "zeros")
+        defs["bv"] = ParamDef((kv, hd), ("kv_heads", "head_dim"), "zeros")
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((hd,), ("head_dim",), "ones")
+        defs["k_norm"] = ParamDef((hd,), ("head_dim",), "ones")
+    return defs
+
+
+def _project_qkv(params, x, cfg: ModelConfig, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    if cfg.pos_emb == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, block_kv: int = 512,
+                        q_offset: int = 0) -> jax.Array:
+    """Online-softmax attention scanning over KV blocks.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, KV, D) with H = KV * G.
+    Memory high-water is O(Sq * block_kv) per head instead of O(Sq * Sk).
+    """
+    b, sq, h, d = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(d)
+    block_kv = min(block_kv, sk)
+    n_blocks = sk // block_kv
+    assert sk % block_kv == 0, (sk, block_kv)
+
+    qg = q.reshape(b, sq, kvh, g, d) * scale
+    kb = k.reshape(b, n_blocks, block_kv, kvh, d)
+    vb = v.reshape(b, n_blocks, block_kv, kvh, d)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kc, vc, blk = inp  # (B, blk, KV, D), (B, blk, KV, D), ()
+        s = jnp.einsum("bqkgd,bjkd->bkgqj", qg, kc).astype(jnp.float32)
+        if causal:
+            k_pos = blk * block_kv + jnp.arange(block_kv)
+            mask = q_pos[:, None] >= k_pos[None, :]  # (Sq, blk)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqj,bjkd->bkgqd", p.astype(vc.dtype), vc).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, kvh, g, sq, d), jnp.float32)
+    kb_t = jnp.moveaxis(kb, 1, 0)  # (n_blocks, B, blk, KV, D)
+    vb_t = jnp.moveaxis(vb, 1, 0)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0), (kb_t, vb_t, jnp.arange(n_blocks)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d)
+    return out.astype(q.dtype)
+
+
+def full_attention(params: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
+                   positions: jax.Array, block_kv: int = 512
+                   ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Causal self-attention over the whole sequence. Returns (out, (k, v))."""
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    ctx = blockwise_attention(q, k, v, causal=True, block_kv=block_kv)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, params["wo"].astype(x.dtype))
+    return out, (k, v)
+
+
+def decode_attention(params: Dict[str, jax.Array], x: jax.Array,
+                     cfg: ModelConfig, cache_k: jax.Array, cache_v: jax.Array,
+                     pos: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode against a (B, S_max, KV, D) cache at position `pos`.
+
+    Returns (out, new_cache_k, new_cache_v).
+    """
+    b, s_q, h, = x.shape[0], x.shape[1], cfg.n_heads
+    positions = pos + jnp.arange(s_q)[None, :]  # (1, s_q) broadcast over batch
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), pos, axis=1)
+
+    kvh = cfg.n_kv_heads
+    g = h // kvh
+    d = cfg.resolved_head_dim
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, s_q, kvh, g, d) * scale
+    s = jnp.einsum("bqkgd,bjkd->bkgqj", qg, cache_k).astype(jnp.float32)
+    s_max = cache_k.shape[1]
+    valid = jnp.arange(s_max)[None, :] <= (pos + jnp.arange(s_q))[:, None]
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bkgqj,bjkd->bkgqd", p.astype(cache_v.dtype), cache_v)
+    ctx = ctx.transpose(0, 3, 1, 2, 4).reshape(b, s_q, h, d)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, params["wo"].astype(x.dtype))
+    return out, cache_k, cache_v

@@ -1,0 +1,224 @@
+"""Parameter definitions + common layers (functional, pytree-of-dicts style).
+
+A model is declared as a nested dict of :class:`ParamDef` leaves.  The same
+declaration tree yields (a) materialized fp32 parameters, (b) abstract
+ShapeDtypeStructs for the dry-run, and (c) logical-axis PartitionSpecs for the
+distribution layer — guaranteed structurally consistent because they all come
+from one tree.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ParamDef(NamedTuple):
+    """Declaration of one parameter leaf."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis name per dim (None = never sharded)
+    init: str = "normal"  # normal | zeros | ones | embed | uniform_conv
+    scale: float = 1.0  # stddev for "normal"/"embed"
+
+    def initializer(self, rng: jax.Array) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, jnp.float32)
+        if self.init == "ones":
+            return jnp.ones(self.shape, jnp.float32)
+        if self.init in ("normal", "embed"):
+            return self.scale * jax.random.truncated_normal(
+                rng, -3.0, 3.0, self.shape, jnp.float32)
+        if self.init == "uniform_conv":  # conv1d default: U(-1/sqrt(k), 1/sqrt(k))
+            lim = self.scale
+            return jax.random.uniform(rng, self.shape, jnp.float32, -lim, lim)
+        raise ValueError(f"unknown init {self.init!r}")
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(rng: jax.Array, defs: Any) -> Any:
+    """Materialize a ParamDef tree into fp32 arrays (path-deterministic rngs)."""
+    leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=_is_def)
+    rngs = jax.random.split(rng, len(leaves))
+    out = [d.initializer(r) for d, r in zip(leaves, rngs)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(defs: Any) -> Any:
+    """ShapeDtypeStructs for the dry-run — no allocation."""
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, jnp.float32), defs, is_leaf=_is_def)
+
+
+def logical_axes(defs: Any) -> Any:
+    """Tree of logical-axis tuples, parallel to the params tree."""
+    return jax.tree_util.tree_map(lambda d: d.axes, defs, is_leaf=_is_def)
+
+
+def param_count(defs: Any) -> int:
+    return sum(int(np.prod(d.shape))
+               for d in jax.tree_util.tree_leaves(defs, is_leaf=_is_def))
+
+
+def stack_defs(n: int, defs: Any, axis_name: str = "layers") -> Any:
+    """Stack a per-layer ParamDef tree for scan-over-layers (leading dim n)."""
+    return jax.tree_util.tree_map(
+        lambda d: ParamDef((n,) + d.shape, (axis_name,) + d.axes, d.init, d.scale),
+        defs, is_leaf=_is_def)
+
+
+def maybe_scan(body, init, xs, unroll: bool = False):
+    """lax.scan, or a Python-unrolled equivalent (roofline measurement mode:
+    XLA cost analysis counts while-loop bodies once, so per-layer collective
+    bytes are measured on small unrolled depths and extrapolated)."""
+    if not unroll:
+        return jax.lax.scan(body, init, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    carry = init
+    ys = []
+    for i in range(n):
+        x_i = jax.tree_util.tree_map(lambda t: t[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if all(y is None for y in ys):
+        return carry, None
+    stacked = jax.tree_util.tree_map(lambda *ts: jnp.stack(ts), *ys)
+    return carry, stacked
+
+
+def maybe_checkpoint(fn, remat: str):
+    """Activation-checkpointing policy for the layer-scan body."""
+    if remat == "none":
+        return fn
+    if remat == "full":
+        return jax.checkpoint(fn)
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_no_batch_dims)
+    raise ValueError(f"unknown remat policy {remat!r}")
+
+
+# ---------------------------------------------------------------------------
+# numerics helpers
+# ---------------------------------------------------------------------------
+
+def cast(tree: Any, dtype) -> Any:
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def apply_norm(params: Dict[str, jax.Array], x: jax.Array, kind: str,
+               eps: float) -> jax.Array:
+    if kind == "rmsnorm":
+        return rms_norm(x, params["scale"], eps)
+    return layer_norm(x, params["scale"], params["bias"], eps)
+
+
+def norm_def(d: int, kind: str, axes: Tuple[Optional[str], ...] = ("embed",)):
+    if kind == "rmsnorm":
+        return {"scale": ParamDef((d,), axes, "ones")}
+    return {"scale": ParamDef((d,), axes, "ones"),
+            "bias": ParamDef((d,), axes, "zeros")}
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) with positions (..., S). Rotate-half convention."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, D/2) broadcasting over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_def(d_model: int, d_ff: int, kind: str) -> Dict[str, ParamDef]:
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(d_ff)
+    if kind == "swiglu":
+        return {
+            "w_gate": ParamDef((d_model, d_ff), ("embed", "mlp"), "normal", s_in),
+            "w_up": ParamDef((d_model, d_ff), ("embed", "mlp"), "normal", s_in),
+            "w_down": ParamDef((d_ff, d_model), ("mlp", "embed"), "normal", s_out),
+        }
+    return {
+        "w_up": ParamDef((d_model, d_ff), ("embed", "mlp"), "normal", s_in),
+        "b_up": ParamDef((d_ff,), ("mlp",), "zeros"),
+        "w_down": ParamDef((d_ff, d_model), ("mlp", "embed"), "normal", s_out),
+        "b_down": ParamDef((d_model,), ("embed",), "zeros"),
+    }
+
+
+def mlp_apply(params: Dict[str, jax.Array], x: jax.Array, kind: str) -> jax.Array:
+    if kind == "swiglu":
+        gate = jax.nn.silu(x @ params["w_gate"])
+        return (gate * (x @ params["w_up"])) @ params["w_down"]
+    h = jax.nn.gelu(x @ params["w_up"] + params["b_up"])
+    return h @ params["w_down"] + params["b_down"]
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       mask: Optional[jax.Array], vocab_size: int
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Mean masked next-token loss. Handles padded vocab (logits wider than
+    vocab_size get -inf)."""
+    logits = logits.astype(jnp.float32)
+    padded = logits.shape[-1]
+    if padded != vocab_size:
+        iota = jnp.arange(padded)
+        logits = jnp.where(iota[None, None, :] < vocab_size, logits, -1e9)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    total = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / total
+    return loss, total

@@ -1,0 +1,253 @@
+"""Mamba-2 (SSD) block — chunked state-space dual formulation.
+
+The chunked scan (`ssd_reference`) is the pure-jnp oracle for the Pallas
+kernel in ``repro/kernels/ssd``.  Everything runs inside a single
+``lax.scan`` over chunks so the intra-chunk quadratic tensors stay
+O(B*H*Q^2) regardless of sequence length — this is what makes the 500K-token
+cells tractable.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.layers import ParamDef, rms_norm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# core SSD math (oracle for kernels/ssd)
+# ---------------------------------------------------------------------------
+
+def ssd_reference(x: jax.Array, dt: jax.Array, a_coef: jax.Array,
+                  b_in: jax.Array, c_in: jax.Array, chunk: int,
+                  init_state: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x:      (B, S, H, P)   per-head inputs
+    dt:     (B, S, H)      post-softplus step sizes
+    a_coef: (H,)           negative per-head decay coefficients
+    b_in:   (B, S, N)      input projections (single group, shared over heads)
+    c_in:   (B, S, N)      output projections
+    Returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    b, s, h, p = x.shape
+    n = b_in.shape[-1]
+    chunk = min(chunk, s)
+    if s % chunk:  # pad with dt=0 steps (decay exp(0)=1, zero input: state-safe)
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+        y, state = ssd_reference(x, dt, a_coef, b_in, c_in, chunk, init_state)
+        return y[:, :s], state
+    nc = s // chunk
+
+    log_decay = dt * a_coef  # (B, S, H), <= 0
+    x_dt = (x * dt[..., None]).astype(jnp.float32)
+
+    def to_chunks(t, extra_dims):
+        return t.reshape((b, nc, chunk) + extra_dims)
+
+    lc = to_chunks(log_decay, (h,))  # (B, nc, Q, H)
+    xc = to_chunks(x_dt, (h, p))
+    bc = to_chunks(b_in.astype(jnp.float32), (n,))
+    cc = to_chunks(c_in.astype(jnp.float32), (n,))
+
+    state0 = (jnp.zeros((b, h, n, p), jnp.float32) if init_state is None
+              else init_state.astype(jnp.float32))
+    idx = jnp.arange(chunk)
+    causal = idx[:, None] >= idx[None, :]  # (Q, Q)
+
+    def step(state, inp):
+        lq, xq, bq, cq = inp  # (B,Q,H), (B,Q,H,P), (B,Q,N), (B,Q,N)
+        cum = jnp.cumsum(lq, axis=1)  # (B,Q,H) inclusive
+        # intra-chunk: y_i += sum_{j<=i} (C_i . B_j) exp(cum_i - cum_j) xdt_j
+        scores = jnp.einsum("bin,bjn->bij", cq, bq)  # (B,Q,Q)
+        gap = cum[:, :, None, :] - cum[:, None, :, :]  # (B,Q,Q,H) <=0 on causal
+        decay = jnp.exp(jnp.where(causal[None, :, :, None], gap, NEG_INF))
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp", scores, decay, xq)
+        # contribution of the carried state
+        y_inter = jnp.einsum("bin,bhnp,bih->bihp", cq, state,
+                             jnp.exp(cum))
+        # chunk state: S_c = sum_j exp(cum_last - cum_j) B_j x xdt_j
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)  # (B,Q,H) <= 1
+        new_state = (jnp.exp(cum[:, -1, :])[:, :, None, None] * state
+                     + jnp.einsum("bjn,bjh,bjhp->bhnp", bq, decay_to_end, xq))
+        return new_state, y_intra + y_inter
+
+    xs = (jnp.moveaxis(lc, 1, 0), jnp.moveaxis(xc, 1, 0),
+          jnp.moveaxis(bc, 1, 0), jnp.moveaxis(cc, 1, 0))
+    final_state, ys = jax.lax.scan(step, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(state: jax.Array, x: jax.Array, dt: jax.Array,
+                    a_coef: jax.Array, b_in: jax.Array, c_in: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Single-token SSD update. state (B,H,N,P); x (B,H,P); dt (B,H);
+    b_in/c_in (B,N)."""
+    decay = jnp.exp(dt * a_coef)  # (B,H)
+    x_dt = (x * dt[..., None]).astype(jnp.float32)
+    state = (decay[..., None, None] * state
+             + jnp.einsum("bn,bhp->bhnp", b_in.astype(jnp.float32), x_dt))
+    y = jnp.einsum("bn,bhnp->bhp", c_in.astype(jnp.float32), state)
+    return y.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# conv helpers
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x (B,S,D), w (K,D), bias (D)."""
+    k = w.shape[0]
+    pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    # windows: sum_k w[k] * x[t - K + 1 + k]
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i:i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+    return out + bias[None, None, :].astype(x.dtype)
+
+
+def conv_decode_step(conv_state: jax.Array, x_t: jax.Array, w: jax.Array,
+                     bias: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """conv_state (B, K-1, D); x_t (B, D). Returns (y_t, new_state)."""
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,K,D)
+    y = jnp.einsum("bkd,kd->bd", window, w.astype(x_t.dtype)) + bias.astype(x_t.dtype)
+    return y, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# the Mamba-2 block
+# ---------------------------------------------------------------------------
+
+def mamba2_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def mamba2_def(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    d_inner, h, p, n = mamba2_dims(cfg)
+    k = cfg.conv_kernel
+    s = 1.0 / math.sqrt(d)
+    cl = 1.0 / math.sqrt(k)
+    return {
+        "norm_in": {"scale": ParamDef((d,), ("embed",), "ones")},
+        "wz": ParamDef((d, d_inner), ("embed", "ssm_inner"), "normal", s),
+        "wx": ParamDef((d, d_inner), ("embed", "ssm_inner"), "normal", s),
+        "wb": ParamDef((d, n), ("embed", "state"), "normal", s),
+        "wc": ParamDef((d, n), ("embed", "state"), "normal", s),
+        "wdt": ParamDef((d, h), ("embed", "ssm_heads"), "normal", s),
+        "conv_x": {"w": ParamDef((k, d_inner), ("conv", "ssm_inner"),
+                                 "uniform_conv", cl),
+                   "b": ParamDef((d_inner,), ("ssm_inner",), "zeros")},
+        "conv_b": {"w": ParamDef((k, n), ("conv", "state"), "uniform_conv", cl),
+                   "b": ParamDef((n,), ("state",), "zeros")},
+        "conv_c": {"w": ParamDef((k, n), ("conv", "state"), "uniform_conv", cl),
+                   "b": ParamDef((n,), ("state",), "zeros")},
+        "a_log": ParamDef((h,), ("ssm_heads",), "zeros"),  # A = -exp(a_log)
+        "d_skip": ParamDef((h,), ("ssm_heads",), "ones"),
+        "dt_bias": ParamDef((h,), ("ssm_heads",), "zeros"),
+        "norm_gate": {"scale": ParamDef((d_inner,), ("ssm_inner",), "ones")},
+        "wo": ParamDef((d_inner, d), ("ssm_inner", "embed"), "normal",
+                       1.0 / math.sqrt(d_inner)),
+    }
+
+
+def _proj_inputs(lp, h_in, cfg: ModelConfig):
+    d_inner, h, p, n = mamba2_dims(cfg)
+    dt_raw = h_in @ lp["wdt"].astype(h_in.dtype)  # (B,S,H)
+    z = h_in @ lp["wz"].astype(h_in.dtype)
+    x_in = h_in @ lp["wx"].astype(h_in.dtype)
+    b_raw = h_in @ lp["wb"].astype(h_in.dtype)
+    c_raw = h_in @ lp["wc"].astype(h_in.dtype)
+    return z, x_in, b_raw, c_raw, dt_raw
+
+
+def mamba2_block(lp: Dict[str, Any], x: jax.Array, cfg: ModelConfig
+                 ) -> jax.Array:
+    """Full-sequence Mamba-2 mixing block (pre-norm residual inside)."""
+    d_inner, h, p, n = mamba2_dims(cfg)
+    b, s, _ = x.shape
+    h_in = rms_norm(x, lp["norm_in"]["scale"], cfg.norm_eps)
+    z, x_in, b_raw, c_raw, dt_raw = _proj_inputs(lp, h_in, cfg)
+    x_conv = jax.nn.silu(causal_conv1d(x_in, lp["conv_x"]["w"],
+                                       lp["conv_x"]["b"]))
+    b_conv = jax.nn.silu(causal_conv1d(b_raw, lp["conv_b"]["w"],
+                                       lp["conv_b"]["b"]))
+    c_conv = jax.nn.silu(causal_conv1d(c_raw, lp["conv_c"]["w"],
+                                       lp["conv_c"]["b"]))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + lp["dt_bias"].astype(jnp.float32))
+    a_coef = -jnp.exp(lp["a_log"].astype(jnp.float32))
+    xh = x_conv.reshape(b, s, h, p)
+    y, _state = ssd_reference(xh, dt, a_coef, b_conv, c_conv, cfg.ssm_chunk)
+    y = y + lp["d_skip"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(b, s, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), lp["norm_gate"]["scale"], cfg.norm_eps)
+    out = y @ lp["wo"].astype(y.dtype)
+    return x + out
+
+
+def mamba2_cache_shapes(cfg: ModelConfig, n_layers: int, batch: int, dtype):
+    d_inner, h, p, n = mamba2_dims(cfg)
+    k = cfg.conv_kernel
+    f32 = jnp.float32
+    return {
+        "ssm_state": jax.ShapeDtypeStruct((n_layers, batch, h, n, p), f32),
+        "conv_x": jax.ShapeDtypeStruct((n_layers, batch, k - 1, d_inner), dtype),
+        "conv_b": jax.ShapeDtypeStruct((n_layers, batch, k - 1, n), dtype),
+        "conv_c": jax.ShapeDtypeStruct((n_layers, batch, k - 1, n), dtype),
+    }
+
+
+def mamba2_cache_axes():
+    return {
+        "ssm_state": ("layers", "batch", "ssm_heads", "state", None),
+        "conv_x": ("layers", "batch", None, "ssm_inner"),
+        "conv_b": ("layers", "batch", None, "state"),
+        "conv_c": ("layers", "batch", None, "state"),
+    }
+
+
+def mamba2_decode_block(lp, x: jax.Array, cache: Dict[str, jax.Array],
+                        cfg: ModelConfig
+                        ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token decode. x (B, 1, D); cache leaves without the layer dim."""
+    d_inner, h, p, n = mamba2_dims(cfg)
+    b = x.shape[0]
+    h_in = rms_norm(x[:, 0, :], lp["norm_in"]["scale"], cfg.norm_eps)
+    z, x_in, b_raw, c_raw, dt_raw = _proj_inputs(lp, h_in, cfg)
+    x_c, conv_x = conv_decode_step(cache["conv_x"], x_in,
+                                   lp["conv_x"]["w"], lp["conv_x"]["b"])
+    b_c, conv_b = conv_decode_step(cache["conv_b"], b_raw,
+                                   lp["conv_b"]["w"], lp["conv_b"]["b"])
+    c_c, conv_c = conv_decode_step(cache["conv_c"], c_raw,
+                                   lp["conv_c"]["w"], lp["conv_c"]["b"])
+    x_c, b_c, c_c = (jax.nn.silu(t) for t in (x_c, b_c, c_c))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + lp["dt_bias"].astype(jnp.float32))
+    a_coef = -jnp.exp(lp["a_log"].astype(jnp.float32))
+    xh = x_c.reshape(b, h, p)
+    y, state = ssd_decode_step(cache["ssm_state"], xh, dt, a_coef, b_c, c_c)
+    y = y + lp["d_skip"].astype(y.dtype)[None, :, None] * xh
+    y = y.reshape(b, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), lp["norm_gate"]["scale"], cfg.norm_eps)
+    out = (y @ lp["wo"].astype(y.dtype))[:, None, :]
+    new_cache = {"ssm_state": state, "conv_x": conv_x, "conv_b": conv_b,
+                 "conv_c": conv_c}
+    return x + out, new_cache

@@ -1,0 +1,123 @@
+"""Uniform model API: build_model / defs / input specs for every family."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models.moe import MoELM, moe_defs
+from repro.models.rwkv6 import RWKV6LM, rwkv6_defs
+from repro.models.transformer import DenseLM, dense_defs
+from repro.models.zamba2 import Zamba2LM, zamba2_defs
+
+
+def model_defs(cfg: ModelConfig):
+    if cfg.family == "dense":
+        return dense_defs(cfg)
+    if cfg.family == "moe":
+        return moe_defs(cfg)
+    if cfg.family == "rwkv":
+        return rwkv6_defs(cfg)
+    if cfg.family == "hybrid":
+        return zamba2_defs(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def build_model(cfg: ModelConfig, dtype=jnp.bfloat16, remat: str = "full",
+                block_kv: int = 512):
+    cls = {"dense": DenseLM, "moe": MoELM, "rwkv": RWKV6LM,
+           "hybrid": Zamba2LM}[cfg.family]
+    return cls(cfg=cfg, dtype=dtype, remat=remat, block_kv=block_kv)
+
+
+def init_params(rng: jax.Array, cfg: ModelConfig):
+    return L.init_params(rng, model_defs(cfg))
+
+
+def abstract_params(cfg: ModelConfig):
+    return L.abstract_params(model_defs(cfg))
+
+
+def param_axes(cfg: ModelConfig):
+    return L.logical_axes(model_defs(cfg))
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return L.param_count(model_defs(cfg))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Per-token active parameters (MoE: routed experts count top_k/E)."""
+    total = param_count(cfg)
+    if cfg.family != "moe":
+        return total
+    e, k = cfg.n_experts, cfg.top_k
+    routed = 3 * cfg.n_layers * cfg.d_model * cfg.d_ff * e
+    return total - routed + routed * k // e
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStructs) per shape cell — the dry-run contract
+# ---------------------------------------------------------------------------
+
+def train_batch_specs(cfg: ModelConfig, batch: int, seq_len: int,
+                      dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    i32 = jnp.int32
+    if cfg.frontend == "audio_frames":
+        return {
+            "frames": jax.ShapeDtypeStruct((batch, seq_len, cfg.d_model), dtype),
+            "labels": jax.ShapeDtypeStruct((batch, seq_len), i32),
+        }
+    if cfg.frontend == "vision_patches":
+        p = cfg.prefix_tokens
+        s_text = seq_len - p
+        return {
+            "patch_embeds": jax.ShapeDtypeStruct((batch, p, cfg.d_model), dtype),
+            "tokens": jax.ShapeDtypeStruct((batch, s_text), i32),
+            "labels": jax.ShapeDtypeStruct((batch, s_text), i32),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((batch, seq_len), i32),
+        "labels": jax.ShapeDtypeStruct((batch, seq_len), i32),
+    }
+
+
+def batch_logical_axes(cfg: ModelConfig) -> Dict[str, Any]:
+    if cfg.frontend == "audio_frames":
+        # "tokens" present for the decode path (codebook ids)
+        return {"frames": ("batch", "seq", "embed"),
+                "tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+    if cfg.frontend == "vision_patches":
+        return {"patch_embeds": ("batch", None, "embed"),
+                "tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+    return {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+
+
+def prefill_batch_specs(cfg: ModelConfig, batch: int, seq_len: int,
+                        dtype=jnp.bfloat16):
+    specs = train_batch_specs(cfg, batch, seq_len, dtype)
+    specs.pop("labels")
+    return specs
+
+
+def decode_token_specs(batch: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+
+
+def make_train_batch(rng, cfg: ModelConfig, batch: int, seq_len: int,
+                     dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    """Random concrete batch matching train_batch_specs (smoke tests)."""
+    r1, r2, r3 = jax.random.split(rng, 3)
+    specs = train_batch_specs(cfg, batch, seq_len, dtype)
+    out = {}
+    for k, sds in specs.items():
+        if sds.dtype == jnp.int32:
+            out[k] = jax.random.randint(r1, sds.shape, 0, cfg.vocab_size,
+                                        jnp.int32)
+        else:
+            out[k] = 0.02 * jax.random.normal(r2, sds.shape, jnp.float32)
+            out[k] = out[k].astype(sds.dtype)
+    return out

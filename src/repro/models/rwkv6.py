@@ -1,0 +1,357 @@
+"""RWKV-6 (Finch): attention-free mixer with data-dependent per-channel decay.
+
+The WKV recurrence is computed in a chunked matmul form (`wkv6_reference`,
+oracle for ``repro/kernels/rwkv6``): within a chunk the pairwise per-channel
+decay tensor is materialized directly (safe exponents: decays <= 1 appear as
+exp of non-positive numbers only), and across chunks the (H, D, D) state is
+carried by a scan.  Decode state is O(1) per layer — this is why rwkv6-7b
+runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.layers import (
+    ParamDef, apply_norm, cast, cross_entropy_loss, layer_norm,
+    maybe_checkpoint, maybe_scan, norm_def, round_up, stack_defs)
+from repro.models.transformer import _logits, embed_inputs
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# core WKV6 math (oracle for kernels/rwkv6)
+# ---------------------------------------------------------------------------
+
+def wkv6_reference(r: jax.Array, k: jax.Array, v: jax.Array,
+                   log_w: jax.Array, u: jax.Array, chunk: int,
+                   init_state: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked WKV-6.
+
+    r, k, v: (B, S, H, D); log_w: (B, S, H, D) (<= 0, data-dependent decay);
+    u: (H, D) bonus for the current token.
+    Recurrence per head:  out_t = r_t . (S_{t-1} + u*k_t (x) v_t)
+                          S_t   = diag(w_t) S_{t-1} + k_t (x) v_t
+    Returns (out (B,S,H,D), final_state (B,H,D,D)).
+    """
+    b, s, h, d = r.shape
+    chunk = min(chunk, s)
+    if s % chunk:  # pad with log_w=0 / k=0 steps: state-safe
+        pad = chunk - s % chunk
+        padw = ((0, 0), (0, pad), (0, 0), (0, 0))
+        out, state = wkv6_reference(
+            jnp.pad(r, padw), jnp.pad(k, padw), jnp.pad(v, padw),
+            jnp.pad(log_w, padw), u, chunk, init_state)
+        return out[:, :s], state
+    nc = s // chunk
+    f32 = jnp.float32
+
+    rc = jnp.moveaxis(r.reshape(b, nc, chunk, h, d), 1, 0).astype(f32)
+    kc = jnp.moveaxis(k.reshape(b, nc, chunk, h, d), 1, 0).astype(f32)
+    vc = jnp.moveaxis(v.reshape(b, nc, chunk, h, d), 1, 0).astype(f32)
+    lw = jnp.moveaxis(log_w.reshape(b, nc, chunk, h, d), 1, 0).astype(f32)
+
+    state0 = (jnp.zeros((b, h, d, d), f32) if init_state is None
+              else init_state.astype(f32))
+    idx = jnp.arange(chunk)
+    strict = idx[:, None] > idx[None, :]  # j < i (diag handled by u-bonus)
+    uf = u.astype(f32)
+
+    def step(state, inp):
+        rq, kq, vq, lq = inp  # (B,Q,H,D)
+        cum = jnp.cumsum(lq, axis=1)  # inclusive (B,Q,H,D)
+        cum_in = cum - lq  # exclusive: decay applied after step j is w_{j+1}..
+        # intra-chunk, strictly causal: exponent cum_in[i] - cum[j] <= 0 for j<i
+        gap = cum_in[:, :, None] - cum[:, None, :, :]  # (B,Q,Q,H,D)
+        gap = jnp.where(strict[None, :, :, None, None], gap, NEG_INF)
+        att = jnp.einsum("bihd,bijhd,bjhd->bijh", rq, jnp.exp(gap), kq)
+        y = jnp.einsum("bijh,bjhd->bihd", att, vq)
+        # current-token bonus
+        bonus = jnp.einsum("bihd,hd,bihd->bih", rq, uf, kq)
+        y = y + bonus[..., None] * vq
+        # carried state: r_i . diag(exp(cum_in_i)) S_prev
+        y = y + jnp.einsum("bihd,bihd,bhde->bihe", rq, jnp.exp(cum_in), state)
+        # state update: S = diag(exp(cum_last)) S + sum_j exp(cum_last-cum_j) k_j (x) v_j
+        decay_to_end = jnp.exp(cum[:, -1][:, None] - cum)  # (B,Q,H,D) <= 1
+        state = (jnp.exp(cum[:, -1])[..., None] * state
+                 + jnp.einsum("bjhd,bjhd,bjhe->bhde", kq, decay_to_end, vq))
+        return state, y
+
+    final_state, ys = jax.lax.scan(step, state0, (rc, kc, vc, lw))
+    out = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, d)
+    return out.astype(r.dtype), final_state
+
+
+def wkv6_decode_step(state: jax.Array, r: jax.Array, k: jax.Array,
+                     v: jax.Array, log_w: jax.Array, u: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """One-token WKV. state (B,H,D,D); r/k/v/log_w (B,H,D)."""
+    f32 = jnp.float32
+    rf, kf, vf = r.astype(f32), k.astype(f32), v.astype(f32)
+    bonus = jnp.einsum("bhd,hd,bhd->bh", rf, u.astype(f32), kf)
+    y = jnp.einsum("bhd,bhde->bhe", rf, state) + bonus[..., None] * vf
+    state = (jnp.exp(log_w.astype(f32))[..., None] * state
+             + jnp.einsum("bhd,bhe->bhde", kf, vf))
+    return y.astype(r.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# the RWKV-6 block
+# ---------------------------------------------------------------------------
+
+def rwkv6_def(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    rank = cfg.rwkv_lora_rank
+    s = 1.0 / math.sqrt(d)
+    return {
+        "ln1": norm_def(d, "layernorm"),
+        "mix": ParamDef((5, d), (None, "embed"), "zeros"),  # r,k,v,w,g lerp
+        "w_base": ParamDef((d,), ("rwkv_inner",), "zeros"),
+        "w_lora_a": ParamDef((d, rank), ("embed", None), "normal", s),
+        "w_lora_b": ParamDef((rank, d), (None, "rwkv_inner"), "zeros"),
+        "wr": ParamDef((d, d), ("embed", "rwkv_inner"), "normal", s),
+        "wk": ParamDef((d, d), ("embed", "rwkv_inner"), "normal", s),
+        "wv": ParamDef((d, d), ("embed", "rwkv_inner"), "normal", s),
+        "wg": ParamDef((d, d), ("embed", "rwkv_inner"), "normal", s),
+        "u": ParamDef((h, hd), ("rwkv_heads", None), "normal", 0.5),
+        "ln_x": norm_def(d, "layernorm", ("rwkv_inner",)),
+        "wo": ParamDef((d, d), ("rwkv_inner", "embed"), "normal", s),
+        "ln2": norm_def(d, "layernorm"),
+        "mix_c": ParamDef((2, d), (None, "embed"), "zeros"),  # channel-mix k,r
+        "wck": ParamDef((d, cfg.d_ff), ("embed", "mlp"), "normal", s),
+        "wcv": ParamDef((cfg.d_ff, d), ("mlp", "embed"), "normal",
+                        1.0 / math.sqrt(cfg.d_ff)),
+        "wcr": ParamDef((d, d), ("embed", "rwkv_inner"), "normal", s),
+    }
+
+
+def _time_mix_inputs(lp, xn: jax.Array, x_prev: jax.Array, cfg: ModelConfig):
+    """Token-shift lerp + projections. xn (B,S,D) normalized; x_prev same
+    shape, shifted by one (previous token's normalized x)."""
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    mix = lp["mix"].astype(xn.dtype)  # (5, D)
+    delta = x_prev - xn
+    xr, xk, xv, xw, xg = (xn + mix[i][None, None, :] * delta for i in range(5))
+    shp = xn.shape[:-1] + (h, hd)
+    r = (xr @ lp["wr"].astype(xn.dtype)).reshape(shp)
+    k = (xk @ lp["wk"].astype(xn.dtype)).reshape(shp)
+    v = (xv @ lp["wv"].astype(xn.dtype)).reshape(shp)
+    g = jax.nn.silu(xg @ lp["wg"].astype(xn.dtype))
+    w_raw = (lp["w_base"].astype(jnp.float32)
+             + jnp.tanh(xw.astype(jnp.float32) @ lp["w_lora_a"].astype(jnp.float32))
+             @ lp["w_lora_b"].astype(jnp.float32))
+    log_w = -jnp.exp(jnp.clip(w_raw, -8.0, 4.0))  # <= 0, data-dependent
+    return r, k, v, g, log_w.reshape(xn.shape[:-1] + (h, hd))
+
+
+def _group_norm_heads(y: jax.Array, scale, bias, h: int, eps: float):
+    """Per-head LayerNorm (GroupNorm with H groups) over (..., H*Dh)."""
+    b, s, _ = y.shape
+    yh = y.reshape(b, s, h, -1).astype(jnp.float32)
+    mu = yh.mean(axis=-1, keepdims=True)
+    var = yh.var(axis=-1, keepdims=True)
+    yn = ((yh - mu) * jax.lax.rsqrt(var + eps)).reshape(b, s, -1)
+    return (yn * scale.astype(jnp.float32) + bias.astype(jnp.float32))
+
+
+def rwkv6_time_mix(lp, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    b, s, d = x.shape
+    h = d // cfg.rwkv_head_dim
+    xn = layer_norm(x, lp["ln1"]["scale"], lp["ln1"]["bias"], cfg.norm_eps)
+    x_prev = jnp.concatenate([jnp.zeros_like(xn[:, :1]), xn[:, :-1]], axis=1)
+    r, k, v, g, log_w = _time_mix_inputs(lp, xn, x_prev, cfg)
+    y, _state = wkv6_reference(r, k, v, log_w, lp["u"], cfg.rwkv_chunk)
+    y = _group_norm_heads(y.reshape(b, s, d), lp["ln_x"]["scale"],
+                          lp["ln_x"]["bias"], h, cfg.norm_eps)
+    y = (y.astype(x.dtype) * g) @ lp["wo"].astype(x.dtype)
+    return x + y
+
+
+def rwkv6_channel_mix(lp, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xn = layer_norm(x, lp["ln2"]["scale"], lp["ln2"]["bias"], cfg.norm_eps)
+    x_prev = jnp.concatenate([jnp.zeros_like(xn[:, :1]), xn[:, :-1]], axis=1)
+    mix = lp["mix_c"].astype(xn.dtype)
+    delta = x_prev - xn
+    xk = xn + mix[0][None, None, :] * delta
+    xr = xn + mix[1][None, None, :] * delta
+    kk = jnp.square(jax.nn.relu(xk @ lp["wck"].astype(xn.dtype)))
+    out = (kk @ lp["wcv"].astype(xn.dtype)) * jax.nn.sigmoid(
+        xr @ lp["wcr"].astype(xn.dtype))
+    return x + out
+
+
+def rwkv6_block(lp, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = rwkv6_time_mix(lp, x, cfg)
+    x = rwkv6_channel_mix(lp, x, cfg)
+    return constrain(x, ("batch", "seq", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def rwkv6_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    pv = round_up(cfg.vocab_size, 128)
+    return {
+        "embed": ParamDef((pv, d), ("vocab", "embed"), "embed", 0.02),
+        "ln_in": norm_def(d, "layernorm"),
+        "layers": stack_defs(cfg.n_layers, rwkv6_def(cfg)),
+        "final_norm": norm_def(d, "layernorm"),
+        "lm_head": ParamDef((d, pv), ("embed", "vocab"), "normal",
+                            1.0 / math.sqrt(d)),
+    }
+
+
+@dataclass
+class RWKV6LM:
+    cfg: ModelConfig
+    dtype: Any = jnp.bfloat16
+    remat: str = "full"
+    block_kv: int = 512  # unused (attention-free); kept for interface parity
+    unroll_layers: bool = False
+
+    def _run(self, params, x):
+        cfg = self.cfg
+        block = maybe_checkpoint(
+            lambda h, lp: rwkv6_block(lp, h, cfg), self.remat)
+
+        def body(carry, lp):
+            return block(carry, lp), None
+
+        x, _ = maybe_scan(body, x, params["layers"], self.unroll_layers)
+        return x
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        params = cast(params, self.dtype)
+        x, _ = embed_inputs(params, batch, cfg, self.dtype)
+        x = layer_norm(x, params["ln_in"]["scale"], params["ln_in"]["bias"],
+                       cfg.norm_eps)
+        x = constrain(x, ("batch", "seq", "embed"))
+        x = self._run(params, x)
+        logits = _logits(params, x, cfg)
+        loss, denom = cross_entropy_loss(
+            logits, batch["labels"], batch.get("loss_mask"), cfg.vocab_size)
+        return loss, {"loss": loss, "tokens": denom}
+
+    # -- serving ------------------------------------------------------------
+    # cache per layer: wkv state (B,H,D,D) + token-shift buffers (B, D) x2
+    def cache_shapes(self, batch_size: int, seq_len: int):
+        cfg = self.cfg
+        d = cfg.d_model
+        h = d // cfg.rwkv_head_dim
+        f32 = jnp.float32
+        L = cfg.n_layers
+        return {
+            "wkv": jax.ShapeDtypeStruct((L, batch_size, h, cfg.rwkv_head_dim,
+                                         cfg.rwkv_head_dim), f32),
+            "shift_t": jax.ShapeDtypeStruct((L, batch_size, d), self.dtype),
+            "shift_c": jax.ShapeDtypeStruct((L, batch_size, d), self.dtype),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    def cache_axes(self):
+        return {
+            "wkv": ("layers", "batch", "rwkv_heads", None, None),
+            "shift_t": ("layers", "batch", "embed"),
+            "shift_c": ("layers", "batch", "embed"),
+            "pos": (),
+        }
+
+    def _decode_layer(self, lp, x, cache_layer, cfg: ModelConfig):
+        """x (B, D) single token; cache_layer leaves without layer dim."""
+        b, d = x.shape
+        h = d // cfg.rwkv_head_dim
+        xn = layer_norm(x[:, None, :], lp["ln1"]["scale"], lp["ln1"]["bias"],
+                        cfg.norm_eps)[:, 0]
+        x_prev = cache_layer["shift_t"].astype(xn.dtype)
+        r, k, v, g, log_w = _time_mix_inputs(
+            lp, xn[:, None, :], x_prev[:, None, :], cfg)
+        y, state = wkv6_decode_step(
+            cache_layer["wkv"], r[:, 0], k[:, 0], v[:, 0], log_w[:, 0], lp["u"])
+        y = _group_norm_heads(y.reshape(b, 1, d), lp["ln_x"]["scale"],
+                              lp["ln_x"]["bias"], h, cfg.norm_eps)
+        y = (y.astype(x.dtype) * g)[:, 0] @ lp["wo"].astype(x.dtype)
+        x = x + y
+        # channel mix
+        xn2 = layer_norm(x[:, None, :], lp["ln2"]["scale"], lp["ln2"]["bias"],
+                         cfg.norm_eps)[:, 0]
+        c_prev = cache_layer["shift_c"].astype(xn2.dtype)
+        mix = lp["mix_c"].astype(xn2.dtype)
+        delta = c_prev - xn2
+        xk = xn2 + mix[0][None, :] * delta
+        xr = xn2 + mix[1][None, :] * delta
+        kk = jnp.square(jax.nn.relu(xk @ lp["wck"].astype(xn2.dtype)))
+        out = (kk @ lp["wcv"].astype(xn2.dtype)) * jax.nn.sigmoid(
+            xr @ lp["wcr"].astype(xn2.dtype))
+        x = x + out
+        new_cache = {"wkv": state, "shift_t": xn.astype(self.dtype),
+                     "shift_c": xn2.astype(self.dtype)}
+        return x, new_cache
+
+    def decode(self, params, cache, tokens):
+        cfg = self.cfg
+        params = cast(params, self.dtype)
+        x, _ = embed_inputs(params, {"tokens": tokens}, cfg, self.dtype)
+        x = layer_norm(x, params["ln_in"]["scale"], params["ln_in"]["bias"],
+                       cfg.norm_eps)[:, 0]
+
+        def body(carry, inp):
+            lp, cl = inp
+            x, new_cl = self._decode_layer(lp, carry, cl, cfg)
+            return x, new_cl
+
+        layer_cache = {k: cache[k] for k in ("wkv", "shift_t", "shift_c")}
+        x, new_cache = maybe_scan(body, x, (params["layers"], layer_cache),
+                                  self.unroll_layers)
+        logits = _logits(params, x[:, None, :], cfg)[:, 0]
+        new_cache["pos"] = cache["pos"] + tokens.shape[1]
+        return logits, new_cache
+
+    def prefill(self, params, batch, cache_len: Optional[int] = None):
+        """Prefill = full forward computing final states per layer."""
+        cfg = self.cfg
+        params = cast(params, self.dtype)
+        x, _ = embed_inputs(params, batch, cfg, self.dtype)
+        x = layer_norm(x, params["ln_in"]["scale"], params["ln_in"]["bias"],
+                       cfg.norm_eps)
+        s = x.shape[1]
+
+        def body(carry, lp):
+            h = carry
+            b, _, d = h.shape
+            nh = d // cfg.rwkv_head_dim
+            xn = layer_norm(h, lp["ln1"]["scale"], lp["ln1"]["bias"],
+                            cfg.norm_eps)
+            x_prev = jnp.concatenate([jnp.zeros_like(xn[:, :1]), xn[:, :-1]],
+                                     axis=1)
+            r, k, v, g, log_w = _time_mix_inputs(lp, xn, x_prev, cfg)
+            y, state = wkv6_reference(r, k, v, log_w, lp["u"], cfg.rwkv_chunk)
+            y = _group_norm_heads(y.reshape(b, s, d), lp["ln_x"]["scale"],
+                                  lp["ln_x"]["bias"], nh, cfg.norm_eps)
+            h = h + (y.astype(h.dtype) * g) @ lp["wo"].astype(h.dtype)
+            shift_t = xn[:, -1]
+            xn2 = layer_norm(h, lp["ln2"]["scale"], lp["ln2"]["bias"],
+                             cfg.norm_eps)
+            h = rwkv6_channel_mix(lp, h, cfg)
+            shift_c = xn2[:, -1]
+            return h, {"wkv": state, "shift_t": shift_t.astype(self.dtype),
+                       "shift_c": shift_c.astype(self.dtype)}
+
+        x, cache = maybe_scan(body, x, params["layers"], self.unroll_layers)
+        logits = _logits(params, x[:, -1:, :], cfg)[:, 0]
+        cache["pos"] = jnp.asarray(s, jnp.int32)
+        return logits, cache

@@ -1,0 +1,223 @@
+"""Zamba2 hybrid: Mamba-2 backbone + one *shared* attention+MLP block.
+
+The shared block (a single set of weights) is applied after every
+``attn_every`` SSM layers; each application keeps its own KV cache.  The
+layer stack is therefore a two-level scan: outer over groups (closing over
+the shared weights, so gradients accumulate across applications — exactly the
+weight-sharing semantics of the published model), inner over the group's
+Mamba layers.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn_mod
+from repro.models import mamba2
+from repro.models.layers import (
+    ParamDef, apply_norm, cast, cross_entropy_loss, maybe_checkpoint,
+    maybe_scan, mlp_def, mlp_apply, norm_def, round_up, stack_defs)
+from repro.models.transformer import _logits, embed_inputs
+
+
+def zamba2_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    assert cfg.n_layers % cfg.attn_every == 0, (cfg.n_layers, cfg.attn_every)
+    d = cfg.d_model
+    pv = round_up(cfg.vocab_size, 128)
+    return {
+        "embed": ParamDef((pv, d), ("vocab", "embed"), "embed", 0.02),
+        "mamba_layers": stack_defs(cfg.n_layers, mamba2.mamba2_def(cfg)),
+        "shared": {
+            "ln1": norm_def(d, cfg.norm),
+            "attn": attn_mod.attention_def(cfg),
+            "ln2": norm_def(d, cfg.norm),
+            "mlp": mlp_def(d, cfg.d_ff, cfg.mlp),
+        },
+        "final_norm": norm_def(d, cfg.norm),
+        "lm_head": ParamDef((d, pv), ("embed", "vocab"), "normal",
+                            1.0 / math.sqrt(d)),
+    }
+
+
+def _group_tree(tree, n_groups: int):
+    """Reshape stacked (L, ...) leaves to (G, L/G, ...)."""
+    return jax.tree_util.tree_map(
+        lambda t: t.reshape((n_groups, t.shape[0] // n_groups) + t.shape[1:]),
+        tree)
+
+
+def _shared_block(shared, x, cfg: ModelConfig, positions, block_kv: int):
+    h = apply_norm(shared["ln1"], x, cfg.norm, cfg.norm_eps)
+    a, kv = attn_mod.full_attention(shared["attn"], h, cfg, positions,
+                                    block_kv=block_kv)
+    x = x + a
+    h = apply_norm(shared["ln2"], x, cfg.norm, cfg.norm_eps)
+    x = x + mlp_apply(shared["mlp"], h, cfg.mlp)
+    return constrain(x, ("batch", "seq", "embed")), kv
+
+
+@dataclass
+class Zamba2LM:
+    cfg: ModelConfig
+    dtype: Any = jnp.bfloat16
+    remat: str = "full"
+    block_kv: int = 512
+    unroll_layers: bool = False
+
+    @property
+    def n_groups(self) -> int:
+        return self.cfg.n_layers // self.cfg.attn_every
+
+    # -- training ------------------------------------------------------------
+    def loss(self, params, batch):
+        cfg = self.cfg
+        params = cast(params, self.dtype)
+        x, positions = embed_inputs(params, batch, cfg, self.dtype)
+        x = constrain(x, ("batch", "seq", "embed"))
+        grouped = _group_tree(params["mamba_layers"], self.n_groups)
+        mblock = maybe_checkpoint(
+            lambda h, lp: mamba2.mamba2_block(lp, h, cfg), self.remat)
+        sblock = maybe_checkpoint(
+            lambda h: _shared_block(params["shared"], h, cfg, positions,
+                                    self.block_kv)[0], self.remat)
+
+        def outer(carry, group_params):
+            def inner(c, lp):
+                return mblock(c, lp), None
+            h, _ = maybe_scan(inner, carry, group_params, self.unroll_layers)
+            h = sblock(h)
+            return h, None
+
+        x, _ = maybe_scan(outer, x, grouped, self.unroll_layers)
+        logits = _logits(params, x, cfg)
+        loss, denom = cross_entropy_loss(
+            logits, batch["labels"], batch.get("loss_mask"), cfg.vocab_size)
+        return loss, {"loss": loss, "tokens": denom}
+
+    # -- serving ---------------------------------------------------------------
+    def cache_shapes(self, batch_size: int, seq_len: int):
+        cfg = self.cfg
+        g = self.n_groups
+        kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        mcache = mamba2.mamba2_cache_shapes(cfg, cfg.n_layers, batch_size,
+                                            self.dtype)
+        kv = jax.ShapeDtypeStruct((g, batch_size, seq_len, kvh, hd), self.dtype)
+        return {"mamba": mcache, "attn_k": kv, "attn_v": kv,
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def cache_axes(self):
+        kv = ("groups", "batch", "seq", "kv_heads", "head_dim")
+        return {"mamba": mamba2.mamba2_cache_axes(), "attn_k": kv,
+                "attn_v": kv, "pos": ()}
+
+    def prefill(self, params, batch, cache_len: Optional[int] = None):
+        cfg = self.cfg
+        params = cast(params, self.dtype)
+        x, positions = embed_inputs(params, batch, cfg, self.dtype)
+        s = x.shape[1]
+        cache_len = cache_len or s
+        grouped = _group_tree(params["mamba_layers"], self.n_groups)
+
+        # mamba prefill needs final states: run block capturing state
+        def mamba_with_state(lp, h):
+            d_inner, nh, p, n = mamba2.mamba2_dims(cfg)
+            b = h.shape[0]
+            hn = mamba2.rms_norm(h, lp["norm_in"]["scale"], cfg.norm_eps)
+            z, x_in, b_raw, c_raw, dt_raw = mamba2._proj_inputs(lp, hn, cfg)
+            x_conv = jax.nn.silu(mamba2.causal_conv1d(
+                x_in, lp["conv_x"]["w"], lp["conv_x"]["b"]))
+            b_conv = jax.nn.silu(mamba2.causal_conv1d(
+                b_raw, lp["conv_b"]["w"], lp["conv_b"]["b"]))
+            c_conv = jax.nn.silu(mamba2.causal_conv1d(
+                c_raw, lp["conv_c"]["w"], lp["conv_c"]["b"]))
+            dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                                 + lp["dt_bias"].astype(jnp.float32))
+            a_coef = -jnp.exp(lp["a_log"].astype(jnp.float32))
+            xh = x_conv.reshape(b, s, nh, p)
+            y, state = mamba2.ssd_reference(xh, dt, a_coef, b_conv, c_conv,
+                                            cfg.ssm_chunk)
+            y = y + lp["d_skip"].astype(y.dtype)[None, None, :, None] * xh
+            y = y.reshape(b, s, d_inner)
+            y = mamba2.rms_norm(y * jax.nn.silu(z), lp["norm_gate"]["scale"],
+                                cfg.norm_eps)
+            out = h + y @ lp["wo"].astype(y.dtype)
+            kk = cfg.conv_kernel - 1
+            cache = {
+                "ssm_state": state,
+                "conv_x": x_in[:, -kk:, :].astype(self.dtype),
+                "conv_b": b_raw[:, -kk:, :].astype(self.dtype),
+                "conv_c": c_raw[:, -kk:, :].astype(self.dtype),
+            }
+            return out, cache
+
+        def outer(carry, group_params):
+            def inner(c, lp):
+                return mamba_with_state(lp, c)
+            h, mcaches = maybe_scan(
+                lambda c, lp: mamba_with_state(lp, c), carry, group_params,
+                self.unroll_layers)
+            h, (k, v) = _shared_block(params["shared"], h, cfg, positions,
+                                      self.block_kv)
+            return h, (mcaches, k, v)
+
+        x, (mcaches, ks, vs) = maybe_scan(outer, x, grouped,
+                                          self.unroll_layers)
+        logits = _logits(params, x[:, -1:, :], cfg)[:, 0]
+        # mcaches leaves: (G, L/G, B, ...) -> (L, B, ...)
+        mcaches = jax.tree_util.tree_map(
+            lambda t: t.reshape((t.shape[0] * t.shape[1],) + t.shape[2:]),
+            mcaches)
+        pad = cache_len - s
+        if pad:
+            zeros = jnp.zeros(
+                (ks.shape[0], ks.shape[1], pad) + ks.shape[3:], ks.dtype)
+            ks = jnp.concatenate([ks, zeros], axis=2)
+            vs = jnp.concatenate([vs, zeros], axis=2)
+        cache = {"mamba": mcaches, "attn_k": ks.astype(self.dtype),
+                 "attn_v": vs.astype(self.dtype),
+                 "pos": jnp.asarray(s, jnp.int32)}
+        return logits, cache
+
+    def decode(self, params, cache, tokens):
+        cfg = self.cfg
+        params = cast(params, self.dtype)
+        pos = cache["pos"]
+        x, _ = embed_inputs(params, {"tokens": tokens}, cfg, self.dtype,
+                            start_pos=pos)
+        grouped = _group_tree(params["mamba_layers"], self.n_groups)
+        gm = _group_tree(cache["mamba"], self.n_groups)
+
+        def outer(carry, inp):
+            x = carry
+            group_params, group_mcache, ck, cv = inp
+
+            def inner(c, lp_and_cache):
+                lp, mc = lp_and_cache
+                y, new_mc = mamba2.mamba2_decode_block(lp, c, mc, cfg)
+                return y, new_mc
+
+            x, new_mc = maybe_scan(inner, x, (group_params, group_mcache),
+                                   self.unroll_layers)
+            h = apply_norm(params["shared"]["ln1"], x, cfg.norm, cfg.norm_eps)
+            a, ck, cv = attn_mod.decode_attention(
+                params["shared"]["attn"], h, cfg, ck, cv, pos)
+            x = x + a
+            h = apply_norm(params["shared"]["ln2"], x, cfg.norm, cfg.norm_eps)
+            x = x + mlp_apply(params["shared"]["mlp"], h, cfg.mlp)
+            return x, (new_mc, ck, cv)
+
+        x, (new_mamba, ks, vs) = maybe_scan(
+            outer, x, (grouped, gm, cache["attn_k"], cache["attn_v"]),
+            self.unroll_layers)
+        new_mamba = jax.tree_util.tree_map(
+            lambda t: t.reshape((t.shape[0] * t.shape[1],) + t.shape[2:]),
+            new_mamba)
+        logits = _logits(params, x, cfg)[:, 0]
+        return logits, {"mamba": new_mamba, "attn_k": ks, "attn_v": vs,
+                        "pos": pos + tokens.shape[1]}

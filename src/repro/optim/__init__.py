@@ -1,0 +1,13 @@
+from repro.optim.adam import (  # noqa: F401
+    abstract_opt_state,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    init_opt_state,
+)
+from repro.optim.compression import (  # noqa: F401
+    compressed_allreduce,
+    ef_compress_tree,
+    init_error_state,
+)
+from repro.optim.schedule import lr_at  # noqa: F401

@@ -1,0 +1,72 @@
+"""AdamW with fp32 master state, global-norm clipping, and the paper's
+variance telemetry exposed from inside the jitted step.
+
+The optimizer is a plain pytree transform (no optax dependency): state =
+{"m": tree, "v": tree, "count": int32}.  ``v`` is exactly the Adam variance
+state whose l1 norm / max element the paper's Section 3 analysis tracks.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+def init_opt_state(params: Any) -> Dict[str, Any]:
+    zeros = lambda t: jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return {"m": zeros(params), "v": zeros(params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def abstract_opt_state(params_shapes: Any) -> Dict[str, Any]:
+    sds = lambda t: jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), t)
+    return {"m": sds(params_shapes), "v": sds(params_shapes),
+            "count": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float
+                        ) -> Tuple[Any, jax.Array]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale), grads), gnorm
+
+
+def adamw_update(params: Any, grads: Any, opt_state: Dict[str, Any],
+                 lr: jax.Array, cfg: OptimizerConfig
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """One AdamW step. grads must already be fp32 (post-clip). Returns
+    (new_params, new_opt_state, telemetry)."""
+    b1, b2, eps = cfg.beta1, cfg.beta2, cfg.eps
+    count = opt_state["count"] + 1
+    cf = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** cf
+    bc2 = 1.0 - b2 ** cf
+
+    new_m = jax.tree_util.tree_map(
+        lambda m, g: b1 * m + (1.0 - b1) * g, opt_state["m"], grads)
+    new_v = jax.tree_util.tree_map(
+        lambda v, g: b2 * v + (1.0 - b2) * jnp.square(g),
+        opt_state["v"], grads)
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        step = mhat / (jnp.sqrt(vhat) + eps) + cfg.weight_decay * p
+        return (p - lr * step).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(upd, params, new_m, new_v)
+    from repro.core.stability import momentum_stats, variance_stats
+    telemetry = {**variance_stats(new_v), **momentum_stats(new_m)}
+    return new_params, {"m": new_m, "v": new_v, "count": count}, telemetry

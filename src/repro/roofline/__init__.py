@@ -1,0 +1,7 @@
+from repro.roofline.analysis import (  # noqa: F401
+    RooflineReport,
+    build_report,
+    model_flops,
+    parse_collectives,
+)
+from repro.roofline import hw  # noqa: F401

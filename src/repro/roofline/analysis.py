@@ -1,0 +1,261 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / (chips x peak FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM bandwidth)
+    collective term = collective wire bytes / (chips x link bandwidth)
+
+``cost_analysis`` on a post-SPMD module is *per-device*; collective bytes
+are parsed from the compiled HLO text (result shapes of all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute ops, with
+replica-group sizes for ring multipliers).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_ITOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_PERMUTE_PAIRS_RE = re.compile(r"source_target_pairs=\{\{")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of all array shapes in a result type string
+    (handles tuple results)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str, total_devices: int
+                      ) -> List[Dict]:
+    """Extract collective ops: kind, result bytes, group size."""
+    out = []
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (.*)", stripped)
+        if not m:
+            continue
+        rhs = m.group(1)
+        kind = None
+        for k in COLLECTIVE_KINDS:
+            if re.search(rf"\b{k}(-start|-done)?\(", rhs):
+                kind = k
+                break
+        if kind is None:
+            continue
+        if f"{kind}-done(" in rhs:
+            continue  # counted at -start
+        # result type precedes the op name
+        result_part = rhs.split(f" {kind}", 1)[0]
+        nbytes = _shape_bytes(result_part)
+        # XLA's *CPU* pipeline promotes bf16 all-reduces to f32 (the reduce
+        # computation gets a "_promoted" suffix); on the TPU target these
+        # move bf16 on the wire — halve them so the roofline reflects TPU.
+        promoted = "promoted" in rhs
+        if promoted:
+            nbytes //= 2
+        group = total_devices
+        mi = _GROUPS_ITOTA_RE.search(rhs)
+        if mi:
+            group = int(mi.group(2))
+        else:
+            ml = _GROUPS_LIST_RE.search(rhs)
+            if ml:
+                ids = [x for x in ml.group(1).split(",") if x.strip() != ""]
+                group = max(len(ids), 1)
+        if kind == "collective-permute":
+            group = 2
+        out.append({"kind": kind, "result_bytes": nbytes, "group": group,
+                    "promoted": promoted})
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    kind: str  # train | prefill | decode
+    chips: int
+    hlo_flops: float          # per-device
+    hlo_bytes: float          # per-device
+    collective_wire_bytes: float  # per-device
+    model_flops_global: float
+    collectives: Dict[str, float] = field(default_factory=dict)
+    per_device_memory_bytes: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / hw.PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / hw.HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_wire_bytes / hw.ICI_BW_PER_LINK
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lower_bound(self) -> float:
+        """Perfect-overlap model: max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (global HLO FLOPs) — remat/causal-waste detector."""
+        total = self.hlo_flops * self.chips
+        return self.model_flops_global / total if total else 0.0
+
+    @property
+    def mfu_upper_bound(self) -> float:
+        """Model FLOPs / (chips x peak x step-time lower bound)."""
+        t = self.step_time_lower_bound
+        if not t:
+            return 0.0
+        return self.model_flops_global / (self.chips * hw.PEAK_FLOPS_BF16 * t)
+
+    def summary(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "kind": self.kind, "chips": self.chips,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops_global,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_upper_bound": self.mfu_upper_bound,
+            "collectives": self.collectives,
+            "per_device_memory_bytes": self.per_device_memory_bytes,
+        }
+
+
+def build_report(record: Dict,
+                 measure: Optional[Dict] = None) -> RooflineReport:
+    """From a dry-run JSON record (see launch/dryrun.py), optionally merged
+    with a `--measure` record.
+
+    Without `measure`, flops/bytes come from compiled cost_analysis — which
+    counts while-loop bodies once and therefore *undercounts* scanned models;
+    prefer passing the measure record (scan-aware jaxpr flops + unrolled-
+    depth collective extrapolation)."""
+    chips = record["chips"]
+    if measure is not None:
+        flops = measure["jaxpr_flops_global"] / chips
+        nbytes = measure["jaxpr_bytes_global"] / chips
+        by_kind = dict(measure["collective_wire_bytes_per_device"])
+        wire = sum(by_kind.values())
+        model_flops = measure["model_flops"]
+    else:
+        flops = record["cost"].get("flops", 0.0)
+        nbytes = record["cost"].get("bytes accessed", 0.0)
+        by_kind = {}
+        wire = 0.0
+        for c in record.get("collectives", []):
+            w = hw.wire_bytes(c["kind"], c["result_bytes"], c["group"])
+            by_kind[c["kind"]] = by_kind.get(c["kind"], 0.0) + w
+            wire += w
+        model_flops = record["model_flops"]
+    return RooflineReport(
+        arch=record["arch"], shape=record["shape"], mesh=record["mesh"],
+        kind=record["kind"], chips=chips,
+        hlo_flops=flops,
+        hlo_bytes=nbytes,
+        collective_wire_bytes=wire,
+        model_flops_global=model_flops,
+        collectives=by_kind,
+        per_device_memory_bytes=record.get("memory", {}).get(
+            "per_device_bytes"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# analytic MODEL_FLOPS (the "useful work" numerator)
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg, kind: str, batch: int, seq_len: int,
+                active_params: int) -> float:
+    """6*N*D for train, 2*N*D for prefill, 2*N*B for one decode step —
+    plus the causal attention term where applicable."""
+    if kind == "train":
+        tokens = batch * seq_len
+        base = 6.0 * active_params * tokens
+        attn = 3.0 * _attn_fwd_flops(cfg, batch, seq_len)
+    elif kind == "prefill":
+        tokens = batch * seq_len
+        base = 2.0 * active_params * tokens
+        attn = _attn_fwd_flops(cfg, batch, seq_len)
+    else:  # decode: one token against a seq_len cache
+        base = 2.0 * active_params * batch
+        attn = _attn_decode_flops(cfg, batch, seq_len)
+    return base + attn
+
+
+def _attn_layers(cfg) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.attn_every  # shared-block applications
+    if cfg.family == "rwkv":
+        return 0
+    return cfg.n_layers
+
+
+def _attn_fwd_flops(cfg, batch: int, seq_len: int) -> float:
+    n_attn = _attn_layers(cfg)
+    hd = cfg.resolved_head_dim
+    # causal: S^2/2 effective; QK^T + PV, 2 flops/MAC
+    per_layer = 2.0 * 2.0 * batch * seq_len * seq_len / 2.0 * cfg.n_heads * hd
+    flops = n_attn * per_layer
+    if cfg.family == "rwkv":
+        # linear recurrence: ~ 3 state updates of D x D per head per token
+        d = cfg.rwkv_head_dim
+        h = cfg.d_model // d
+        flops = cfg.n_layers * 6.0 * batch * seq_len * h * d * d
+    if cfg.family == "hybrid":
+        dh, nh, p, n = (cfg.ssm_expand * cfg.d_model,
+                        cfg.ssm_expand * cfg.d_model // cfg.ssm_head_dim,
+                        cfg.ssm_head_dim, cfg.ssm_state)
+        flops += cfg.n_layers * 6.0 * batch * seq_len * nh * p * n
+    return flops
+
+
+def _attn_decode_flops(cfg, batch: int, seq_len: int) -> float:
+    n_attn = _attn_layers(cfg)
+    hd = cfg.resolved_head_dim
+    flops = n_attn * 2.0 * 2.0 * batch * seq_len * cfg.n_heads * hd
+    if cfg.family == "rwkv":
+        d = cfg.rwkv_head_dim
+        h = cfg.d_model // d
+        flops = cfg.n_layers * 6.0 * batch * h * d * d
+    if cfg.family == "hybrid":
+        nh = cfg.ssm_expand * cfg.d_model // cfg.ssm_head_dim
+        flops += cfg.n_layers * 6.0 * batch * nh * cfg.ssm_head_dim * cfg.ssm_state
+    return flops

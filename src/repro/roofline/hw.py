@@ -1,0 +1,23 @@
+"""TPU v5e hardware constants (the dry-run's roofline targets)."""
+from __future__ import annotations
+
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW_PER_LINK = 50e9    # bytes/s per link (~)
+HBM_BYTES = 16 * 2**30    # 16 GiB per chip
+
+# bytes-on-wire multiplier per collective kind for a ring of size n:
+#   all-gather      : out_bytes * (n-1)/n
+#   reduce-scatter  : in_bytes  * (n-1)/n
+#   all-reduce      : 2 * bytes * (n-1)/n   (RS + AG)
+#   all-to-all      : bytes * (n-1)/n
+#   collective-permute : bytes
+def wire_bytes(kind: str, result_bytes: int, group: int) -> float:
+    if group <= 1:
+        return 0.0
+    f = (group - 1) / group
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * f
+    if kind == "collective-permute":
+        return float(result_bytes)
+    return result_bytes * f

@@ -1,0 +1,96 @@
+"""SLW curriculum controller: truncate/repack transforms + accounting."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.base import SLWConfig
+from repro.core import SLWCurriculum
+from repro.core.batch_warmup import BatchWarmup
+from repro.configs.base import BatchWarmupConfig
+
+
+def _batch(b=4, s=256):
+    x = np.arange(b * s, dtype=np.int32).reshape(b, s)
+    return {"tokens": x, "labels": x + 1}
+
+
+def test_truncate_keeps_prefix():
+    cfg = SLWConfig(start_seq_len=8, duration_steps=100, round_multiple=8)
+    cur = SLWCurriculum(cfg, 256)
+    out, tokens = cur.apply(_batch(), seqlen=64)
+    assert out["tokens"].shape == (4, 64)
+    np.testing.assert_array_equal(out["tokens"], _batch()["tokens"][:, :64])
+    assert tokens == 4 * 64
+
+
+def test_repack_conserves_tokens():
+    cfg = SLWConfig(start_seq_len=8, duration_steps=100, mode="repack")
+    cur = SLWCurriculum(cfg, 256)
+    out, tokens = cur.apply(_batch(), seqlen=64)
+    assert out["tokens"].shape == (16, 64)  # 4 * 256//64
+    assert tokens == 4 * 256  # nothing dropped
+    # data preserved in order
+    np.testing.assert_array_equal(out["tokens"].reshape(4, 256),
+                                  _batch()["tokens"])
+
+
+def test_full_length_is_identity():
+    cfg = SLWConfig(start_seq_len=8, duration_steps=10)
+    cur = SLWCurriculum(cfg, 256)
+    cur.state.step = 10_000
+    out, tokens = cur.apply(_batch())
+    assert out["tokens"].shape == (4, 256)
+
+
+def test_vision_prefix_not_truncated():
+    cfg = SLWConfig(start_seq_len=8, duration_steps=100)
+    cur = SLWCurriculum(cfg, 256, prefix_tokens=16)
+    batch = dict(_batch(), patch_embeds=np.zeros((4, 16, 32), np.float32))
+    out, tokens = cur.apply(batch, seqlen=64)
+    assert out["patch_embeds"].shape == (4, 16, 32)  # untouched
+    assert out["tokens"].shape == (4, 64)
+    assert tokens == 4 * 64 + 4 * 16  # text + prefix tokens both counted
+
+
+def test_token_accounting_and_state_roundtrip():
+    cfg = SLWConfig(start_seq_len=8, duration_steps=100)
+    cur = SLWCurriculum(cfg, 256)
+    for _ in range(5):
+        _, tokens = cur.apply(_batch())
+        cur.step_complete(tokens)
+    saved = cur.state_dict()
+    cur2 = SLWCurriculum(cfg, 256)
+    cur2.load_state_dict(saved)
+    assert cur2.state.step == 5
+    assert cur2.seqlen_for_step() == cur.seqlen_for_step()
+
+
+def test_variance_gate_blocks_advance():
+    cfg = SLWConfig(start_seq_len=8, duration_steps=10,
+                    pacing="variance_gated", variance_gate=1.5)
+    cur = SLWCurriculum(cfg, 256)
+    lo = cur.seqlen_for_step()
+    # spiking variance: gate should hold the level down
+    for _ in range(20):
+        cur.observe(1e9 * (1 + cur.state.step))
+        cur.step_complete(32)
+    held = cur.state.gate_level
+    cur2 = SLWCurriculum(cfg, 256)
+    for _ in range(20):
+        cur2.observe(1.0)  # calm variance: advances every step
+        cur2.step_complete(32)
+    assert cur2.state.gate_level > held
+    assert lo <= cur2.seqlen_for_step()
+
+
+def test_batch_warmup_multiple_of_dp():
+    bw = BatchWarmup(BatchWarmupConfig(enabled=True, start_batch=4,
+                                       warmup_tokens=1000),
+                     full_batch=32, dp_size=8)
+    batch = _batch(b=32, s=16)
+    out, tokens = bw.apply(batch, tokens_seen=500)
+    assert out["tokens"].shape[0] % 8 == 0  # the paper's §5.1 constraint
+    assert out["tokens"].shape[0] < 32
+    out_full, _ = bw.apply(batch, tokens_seen=10_000)
+    assert out_full["tokens"].shape[0] == 32

@@ -1,0 +1,119 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family config,
+one forward + one train step on CPU, asserting output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, PAPER, get_arch, reduced
+from repro.configs.base import OptimizerConfig
+from repro.launch import steps as steps_lib
+from repro.models import build_model, init_params, make_train_batch
+from repro.models.layers import round_up
+
+ALL_ARCHS = sorted(ASSIGNED) + sorted(PAPER)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = reduced(get_arch(arch).model)
+    model = build_model(cfg, dtype=jnp.float32, remat="none")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_train_batch(jax.random.PRNGKey(1), cfg, 2, 64, jnp.float32)
+
+    loss, metrics = model.loss(params, batch)
+    assert np.isfinite(float(loss)), arch
+    # random-init loss should be near ln(vocab)
+    assert abs(float(metrics["loss"]) - np.log(cfg.vocab_size)) < 1.5
+
+    step_fn = jax.jit(steps_lib.make_train_step(model, OptimizerConfig(lr=1e-3)))
+    state = steps_lib.init_train_state(jax.random.PRNGKey(0), cfg)
+    new_state, out = step_fn(state, batch, np.float32(1e-3))
+    assert np.isfinite(float(out["loss"]))
+    assert np.isfinite(float(out["grad_norm"]))
+    assert np.isfinite(float(out["var_max"]))
+    assert int(new_state["step"]) == 1
+    # params actually moved
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(state["params"]),
+                        jax.tree_util.tree_leaves(new_state["params"])))
+    assert moved, arch
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_serving_shapes(arch):
+    cfg = reduced(get_arch(arch).model)
+    model = build_model(cfg, dtype=jnp.float32, remat="none")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    b, prompt, cache_len = 2, 16, 32
+    batch = make_train_batch(jax.random.PRNGKey(1), cfg, b, prompt,
+                             jnp.float32)
+    batch.pop("labels")
+    logits, cache = model.prefill(params, batch, cache_len=cache_len)
+    pv = round_up(cfg.vocab_size, 128)
+    assert logits.shape == (b, pv)
+    assert np.isfinite(np.asarray(logits)).all()
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    logits2, cache2 = model.decode(params, cache, tok)
+    assert logits2.shape == (b, pv)
+    assert np.isfinite(np.asarray(logits2)).all()
+    assert int(cache2["pos"]) == int(cache["pos"]) + 1
+
+
+def test_full_configs_match_assignment():
+    """The exact published numbers from the assignment block."""
+    c = get_arch("zamba2-2.7b").model
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab_size,
+            c.ssm_state) == (54, 2560, 32, 10240, 32000, 64)
+    c = get_arch("smollm-360m").model
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (32, 960, 15, 5, 2560, 49152)
+    c = get_arch("phi3-mini-3.8b").model
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab_size) == \
+        (32, 3072, 32, 8192, 32064)
+    c = get_arch("qwen3-32b").model
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size, c.qk_norm) == (64, 5120, 64, 8, 25600, 151936, True)
+    c = get_arch("qwen2-1.5b").model
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size, c.qkv_bias) == (28, 1536, 12, 2, 8960, 151936, True)
+    c = get_arch("rwkv6-7b").model
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab_size) == \
+        (32, 4096, 14336, 65536)
+    c = get_arch("moonshot-v1-16b-a3b").model
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab_size,
+            c.n_experts, c.top_k) == (48, 2048, 16, 1408, 163840, 64, 6)
+    c = get_arch("deepseek-moe-16b").model
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab_size,
+            c.n_experts, c.top_k, c.n_shared_experts) == \
+        (28, 2048, 16, 1408, 102400, 64, 6, 2)
+    c = get_arch("musicgen-large").model
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab_size) == \
+        (48, 2048, 32, 8192, 2048)
+    c = get_arch("llava-next-mistral-7b").model
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (32, 4096, 32, 8, 14336, 32000)
+
+
+def test_param_counts_in_published_ballpark():
+    """Full configs should land near their nameplate parameter counts."""
+    from repro.models import param_count
+    expectations = {
+        "smollm-360m": (0.30e9, 0.45e9),
+        "phi3-mini-3.8b": (3.3e9, 4.3e9),
+        "qwen3-32b": (28e9, 36e9),
+        "qwen2-1.5b": (1.2e9, 2.0e9),
+        "rwkv6-7b": (6e9, 8.5e9),
+        "deepseek-moe-16b": (14e9, 19e9),
+        # the assigned config (48L x 64e x d_ff 1408) arithmetically gives
+        # ~29B total / ~4.8B active; the "16b-a3b" label tracks the hf name,
+        # the numbers here follow the assignment block exactly
+        "moonshot-v1-16b-a3b": (25e9, 33e9),
+        "zamba2-2.7b": (2.2e9, 3.4e9),
+        "musicgen-large": (1.8e9, 2.9e9),
+        "llava-next-mistral-7b": (6.4e9, 8e9),
+    }
+    for arch, (lo, hi) in expectations.items():
+        n = param_count(get_arch(arch).model)
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"

@@ -1,0 +1,86 @@
+"""Property tests for the pacing functions (hypothesis)."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.configs.base import SLWConfig
+from repro.core import pacing
+
+
+@st.composite
+def slw_configs(draw):
+    full = draw(st.sampled_from([256, 1024, 2048, 4096, 32768]))
+    s0 = draw(st.sampled_from([4, 8, 16, 64]))
+    return SLWConfig(
+        enabled=True,
+        pacing=draw(st.sampled_from(["linear", "root", "two_stage"])),
+        start_seq_len=min(s0, full),
+        duration_steps=draw(st.integers(1, 50_000)),
+        round_multiple=draw(st.sampled_from([8, 128])),
+        max_buckets=draw(st.integers(4, 64)),
+    ), full
+
+
+@given(slw_configs())
+@settings(max_examples=200, deadline=None)
+def test_ladder_invariants(cfg_full):
+    cfg, full = cfg_full
+    ladder = pacing.bucket_ladder(cfg, full)
+    assert len(ladder) <= cfg.max_buckets + 8  # geometric prefix allowance
+    assert ladder == tuple(sorted(set(ladder)))
+    assert ladder[0] >= min(cfg.start_seq_len, full)
+    assert ladder[-1] == full
+
+
+@given(slw_configs(), st.integers(0, 100_000))
+@settings(max_examples=200, deadline=None)
+def test_seqlen_bounds(cfg_full, step):
+    cfg, full = cfg_full
+    s = pacing.seqlen_at(cfg, step, full)
+    assert cfg.start_seq_len <= s + cfg.round_multiple  # never far below s0
+    assert s <= full
+
+
+@given(slw_configs())
+@settings(max_examples=100, deadline=None)
+def test_monotone_nondecreasing(cfg_full):
+    cfg, full = cfg_full
+    if cfg.pacing == "two_stage":
+        return  # discrete jump is monotone by construction, tested below
+    ladder = pacing.bucket_ladder(cfg, full)
+    prev = 0
+    for t in range(0, cfg.duration_steps + 10,
+                   max(cfg.duration_steps // 50, 1)):
+        s = pacing.seqlen_at(cfg, t, full, ladder=ladder)
+        assert s >= prev
+        prev = s
+
+
+@given(slw_configs())
+@settings(max_examples=100, deadline=None)
+def test_reaches_full_length_after_duration(cfg_full):
+    cfg, full = cfg_full
+    assert pacing.seqlen_at(cfg, cfg.duration_steps + 1, full) == full
+
+
+def test_paper_linear_formula_exact():
+    """seqlen_t = s0 + (s1-s0)*min(t/T,1), rounded down to the ladder."""
+    cfg = SLWConfig(start_seq_len=8, duration_steps=100, round_multiple=8,
+                    max_buckets=10_000)  # ladder fine enough to be exact-ish
+    raw = pacing.raw_seqlen(cfg, 50, 1024)
+    assert raw == pytest.approx(8 + (1024 - 8) * 0.5)
+    s = pacing.seqlen_at(cfg, 50, 1024)
+    assert s <= raw < s + 8 + 1  # round-down semantics
+
+
+def test_two_stage_is_shortformer():
+    cfg = SLWConfig(pacing="two_stage", two_stage_short_len=128,
+                    duration_steps=1000)
+    assert pacing.raw_seqlen(cfg, 999, 1024) == 128
+    assert pacing.raw_seqlen(cfg, 1000, 1024) == 1024
+
+
+def test_disabled_is_constant():
+    cfg = SLWConfig(enabled=False)
+    for t in (0, 10, 10_000):
+        assert pacing.seqlen_at(cfg, t, 2048) == 2048

@@ -1,0 +1,54 @@
+"""Token-wise LR decay (paper A.2) — closed-form checks."""
+import math
+
+import pytest
+
+from repro.configs.base import OptimizerConfig
+from repro.optim import lr_at
+
+
+def test_token_cosine_closed_form():
+    cfg = OptimizerConfig(lr=6e-4, min_lr=1e-5, schedule="token_cosine",
+                          warmup_tokens=1000, total_tokens=101_000)
+    # warmup: linear in tokens
+    assert lr_at(cfg, 0, 0) == pytest.approx(6e-4 / 1000)
+    assert lr_at(cfg, 0, 499) == pytest.approx(6e-4 * 0.5, rel=1e-2)
+    # cosine midpoint
+    mid = lr_at(cfg, 0, 1000 + 50_000)
+    assert mid == pytest.approx(1e-5 + 0.5 * (6e-4 - 1e-5), rel=1e-3)
+    # end
+    assert lr_at(cfg, 0, 101_000) == pytest.approx(1e-5)
+    assert lr_at(cfg, 0, 10**12) == pytest.approx(1e-5)
+
+
+def test_step_cosine_matches_token_cosine_at_constant_tokens_per_step():
+    """With constant tokens/step the two schedules coincide — the paper's
+    A.2 argument is exactly that SLW breaks this equivalence."""
+    per_step = 100
+    s_cfg = OptimizerConfig(lr=1e-3, min_lr=0.0, schedule="step_cosine",
+                            warmup_steps=10, total_steps=110)
+    t_cfg = OptimizerConfig(lr=1e-3, min_lr=0.0, schedule="token_cosine",
+                            warmup_tokens=10 * per_step,
+                            total_tokens=110 * per_step)
+    for step in (10, 50, 80, 109):  # post-warmup (warmup discretizes
+        # differently: per-step vs per-token granularity)
+        assert lr_at(s_cfg, step, 0) == pytest.approx(
+            lr_at(t_cfg, 0, step * per_step), rel=0.15)
+
+
+def test_slw_tokenwise_slower_than_stepwise_early():
+    """During warmup SLW sees fewer tokens/step; token-wise decay therefore
+    holds LR *higher* at the same step index (A.2 Figure 8)."""
+    full_tokens_per_step = 1000
+    cfg_t = OptimizerConfig(lr=1e-3, min_lr=0.0, schedule="token_cosine",
+                            warmup_tokens=0, total_tokens=100_000)
+    cfg_s = OptimizerConfig(lr=1e-3, min_lr=0.0, schedule="step_cosine",
+                            warmup_steps=0, total_steps=100)
+    # at step 50, SLW has seen only ~20% of the tokens a full-length run has
+    slw_tokens = 50 * full_tokens_per_step // 5
+    assert lr_at(cfg_t, 50, slw_tokens) > lr_at(cfg_s, 50, 0)
+
+
+def test_constant():
+    cfg = OptimizerConfig(lr=3e-4, schedule="constant")
+    assert lr_at(cfg, 123, 456) == 3e-4

@@ -1,0 +1,55 @@
+"""Loss-ratio tracker, variance telemetry, Pearson correlation (Table 3)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import LossRatioTracker, pearson, variance_stats
+from repro.core.stability import momentum_stats
+
+
+def test_loss_ratio_counts_spikes():
+    tr = LossRatioTracker(spike_threshold=1.2)
+    for loss in [5.0, 4.0, 3.0, 4.5, 2.9, 3.2]:
+        tr.update(loss)
+    s = tr.summary()
+    # 4.5/3.0 = 1.5 spike; 3.2/2.9 = 1.10 not a spike
+    assert s["spikes"] == 1
+    assert s["max_loss_ratio"] == pytest.approx(1.5)
+    assert s["steps"] == 6
+
+
+def test_loss_ratio_state_roundtrip():
+    tr = LossRatioTracker()
+    for loss in [5.0, 4.0, 6.0]:
+        tr.update(loss)
+    tr2 = LossRatioTracker()
+    tr2.load_state_dict(tr.state_dict())
+    assert tr2.min_loss == tr.min_loss
+    assert tr2.summary()["spikes"] == tr.summary()["spikes"]
+
+
+def test_variance_stats_match_manual():
+    v = {"a": jnp.array([4.0, 9.0]), "b": jnp.array([[16.0]])}
+    s = variance_stats(v)
+    assert float(s["var_l1"]) == pytest.approx(2 + 3 + 4)
+    assert float(s["var_max"]) == pytest.approx(4.0)
+    m = momentum_stats({"a": jnp.array([-1.0, 2.0])})
+    assert float(m["mom_l1"]) == pytest.approx(3.0)
+
+
+def test_pearson_matches_numpy():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=500)
+    y = 0.3 * x + rng.normal(size=500)
+    r, p = pearson(x, y)
+    assert r == pytest.approx(np.corrcoef(x, y)[0, 1], abs=1e-6)
+    assert p < 1e-6  # strongly significant
+
+
+def test_pearson_null():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=200)
+    y = rng.normal(size=200)
+    r, p = pearson(x, y)
+    assert abs(r) < 0.2
+    assert p > 0.01

@@ -1,0 +1,35 @@
+"""The low-cost tuning strategy (paper Section 4)."""
+from repro.configs.base import SLWConfig
+from repro.core import significant_fluctuation, tune_slw
+
+
+def test_significant_fluctuation_threshold():
+    assert not significant_fluctuation([10.0, 9.0, 8.5, 8.0])
+    assert significant_fluctuation([10.0, 9.0, 12.0])  # 12 > 1.3 * 9
+    assert not significant_fluctuation([10.0, 9.0, 11.0])  # 11 < 1.3 * 9
+
+
+def test_tuner_finds_largest_calm_duration():
+    """Synthetic probe: fluctuates iff T > 6*warmup or seqlen_s < 16."""
+    warmup = 100
+
+    def probe(cfg: SLWConfig):
+        calm = cfg.start_seq_len >= 16 and cfg.duration_steps <= 6 * warmup
+        return [10.0, 9.0, 8.0] if calm else [10.0, 9.0, 14.0]
+
+    res = tune_slw(probe, SLWConfig(), warmup_steps=warmup,
+                   seqlen_s_grid=(8, 16, 32), t_multiple_range=(1, 16))
+    assert res.seqlen_s == 16
+    assert res.duration == 6 * warmup
+    # cost is probe runs, not full trainings
+    assert res.probe_runs <= 3 + 5  # grid walk + log2(16) binary search
+
+
+def test_tuner_prefers_small_seqlen_s():
+    def probe(cfg: SLWConfig):
+        return [10.0, 9.0, 8.0]  # always calm
+
+    res = tune_slw(probe, SLWConfig(), warmup_steps=10,
+                   seqlen_s_grid=(8, 16), t_multiple_range=(1, 4))
+    assert res.seqlen_s == 8
+    assert res.duration == 4 * 10
