@@ -15,7 +15,7 @@ import numpy as np
 
 from benchmarks.common import Row
 from repro.kernels import flash_attention, ssd, wkv6
-from repro.kernels.flash_attention.ref import attention_reference
+from repro.kernels.flash_attention.ref import attention_reference_gqa
 from repro.kernels.rwkv6.ref import wkv6_sequential
 from repro.kernels.ssd.ref import ssd_fwd_reference
 
@@ -41,16 +41,32 @@ def run(quick: bool = False) -> List[Row]:
     fa = lambda: flash_attention(q, k, v, causal=True, block_q=64,
                                  block_k=64, interpret=True)
     us = _timeit(lambda *_: fa())
-    g = h // kv
-    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
-    kf = jnp.repeat(k, g, 2).transpose(0, 2, 1, 3).reshape(b * h, s, d)
-    vf = jnp.repeat(v, g, 2).transpose(0, 2, 1, 3).reshape(b * h, s, d)
-    ref = attention_reference(qf, kf, vf).reshape(b, h, s, d).transpose(
-        0, 2, 1, 3)
+    ref = attention_reference_gqa(q, k, v, causal=True)
     err = float(jnp.max(jnp.abs(fa() - ref)))
     tpu_flops = 2 * 2 * b * h * s * s / 2 * d
     rows.append(("kernels/flash_attention_interp", us,
                  f"max_err={err:.2e} causal_tpu_flops={tpu_flops:.2e}"))
+
+    # flash attention fwd+bwd (custom_vjp through the Pallas bwd kernels)
+    w = jax.random.normal(ks[3], (b, s, h, d))
+
+    def _loss_flash(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, causal=True, block_q=64,
+                                       block_k=64, interpret=True) * w)
+
+    def _loss_ref(q, k, v):
+        return jnp.sum(attention_reference_gqa(q, k, v, causal=True) * w)
+
+    grad_flash = jax.jit(jax.grad(_loss_flash, (0, 1, 2)))
+    us = _timeit(grad_flash, q, k, v)
+    gs = grad_flash(q, k, v)
+    gr = jax.grad(_loss_ref, (0, 1, 2))(q, k, v)
+    gerr = max(float(jnp.max(jnp.abs(a - b_))) for a, b_ in zip(gs, gr))
+    # analytic bwd cost: dq/dk/dv each re-do the two fwd matmuls' work plus
+    # the dp recompute — canonical flash-attention bwd ≈ 2.5x the fwd flops
+    rows.append(("kernels/flash_attention_bwd_interp", us,
+                 f"grad_max_err={gerr:.2e} "
+                 f"causal_tpu_flops={2.5 * tpu_flops:.2e}"))
 
     # ssd
     b2, h2, s2, p2, n2 = 1, 2, 256, 32, 16

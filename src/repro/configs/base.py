@@ -27,6 +27,14 @@ class ModelConfig:
     # attention options
     qk_norm: bool = False
     qkv_bias: bool = False
+    # train/prefill attention backend:
+    #   blockwise        – jnp online-softmax scan (the XLA oracle; default)
+    #   flash            – Pallas flash-attention kernel (fwd + custom-VJP
+    #                      bwd) on TPU; silently falls back to blockwise on
+    #                      other backends so presets stay lowerable anywhere
+    #   flash_interpret  – force the kernel in interpret mode (CPU
+    #                      validation / tests; slow)
+    attn_backend: str = "blockwise"
     rope_theta: float = 10000.0
     pos_emb: str = "rope"  # rope | learned | none
     # block options

@@ -20,6 +20,9 @@ GPT2_117M = ModelConfig(
     mlp="gelu",
     tie_embeddings=True,
     max_seq_len=2048,
+    # the training hot path: Pallas flash attention (fwd + bwd) on TPU;
+    # blockwise fallback keeps CPU smoke tests and the dry-run unchanged
+    attn_backend="flash",
 )
 
 GPT2_1P5B = GPT2_117M.replace(

@@ -14,6 +14,9 @@ MODEL = ModelConfig(
     n_kv_heads=32,
     d_ff=8192,
     vocab_size=32064,
+    # stays on blockwise: head_dim = 3072/32 = 96 is not a multiple of the
+    # 128-lane TPU tile, so the flash kernel would pad every block — switch
+    # after the kernel grows a head_dim-padding path (see ROADMAP)
 )
 
 SPEC = ArchSpec(

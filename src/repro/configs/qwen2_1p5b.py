@@ -15,6 +15,7 @@ MODEL = ModelConfig(
     vocab_size=151936,
     qkv_bias=True,
     tie_embeddings=True,
+    attn_backend="flash",  # Pallas kernel on TPU; blockwise fallback off-TPU
 )
 
 SPEC = ArchSpec(

@@ -15,6 +15,7 @@ MODEL = ModelConfig(
     d_ff=25600,
     vocab_size=151936,
     qk_norm=True,
+    attn_backend="flash",  # Pallas kernel on TPU; blockwise fallback off-TPU
 )
 
 SPEC = ArchSpec(

@@ -15,6 +15,7 @@ MODEL = ModelConfig(
     d_ff=2560,
     vocab_size=49152,
     tie_embeddings=True,
+    attn_backend="flash",  # Pallas kernel on TPU; blockwise fallback off-TPU
 )
 
 SPEC = ArchSpec(

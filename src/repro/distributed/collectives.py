@@ -19,7 +19,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+from repro.distributed.compat import shard_map
 
 NEG_INF = -1e30
 

@@ -1,0 +1,38 @@
+"""Version-tolerant JAX API shims.
+
+``shard_map`` moved between jax releases: on 0.4.x it lives at
+``jax.experimental.shard_map.shard_map`` and takes ``check_rep=``; newer
+releases export ``jax.shard_map`` taking ``check_vma=``.  Import it from
+here so the rest of the tree is release-agnostic.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:  # jax >= 0.5: top-level export
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax 0.4.x: experimental module
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# the check_rep -> check_vma rename landed independently of the top-level
+# export, so probe the actual signature rather than inferring from location
+_CHECK_KW = ("check_vma"
+             if "check_vma" in inspect.signature(_shard_map).parameters
+             else "check_rep")
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = False):
+    """Uniform signature over jax versions (``check_vma`` name wins)."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check_vma})
+
+
+def make_mesh(shape, axes, devices):
+    """``jax.make_mesh`` with Auto axis types where the release supports
+    them (``jax.sharding.AxisType`` arrived after 0.4.x; earlier meshes are
+    implicitly Auto)."""
+    import jax
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    kw = ({"axis_types": (axis_type.Auto,) * len(axes)}
+          if axis_type is not None else {})
+    return jax.make_mesh(shape, axes, devices=devices, **kw)

@@ -4,9 +4,14 @@ Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 public wrapper, interpret-mode fallback off-TPU), ref.py (pure-jnp oracle).
 
 * flash_attention — causal GQA flash attention (the B*L^2*H term SLW
-  modulates; skips above-diagonal blocks the XLA path pays for)
-* ssd             — Mamba-2 chunked SSD scan (zamba2 backbone, long_500k)
-* rwkv6           — chunked WKV with data-dependent per-channel decay
+  modulates; prunes above-diagonal block fetches the XLA path pays for).
+  Differentiable: custom_vjp over fused fwd (o + logsumexp) and three
+  Pallas bwd kernels (delta preprocess, dQ, dK/dV) — selected on the
+  training hot path via ``ModelConfig.attn_backend = "flash"``.
+* ssd             — Mamba-2 chunked SSD scan (zamba2 backbone, long_500k);
+  forward-only (bwd falls back to XLA AD of the reference — see ROADMAP)
+* rwkv6           — chunked WKV with data-dependent per-channel decay;
+  forward-only likewise
 """
 from repro.kernels.flash_attention.ops import flash_attention  # noqa: F401
 from repro.kernels.rwkv6.ops import wkv6  # noqa: F401

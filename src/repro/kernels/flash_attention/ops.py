@@ -1,21 +1,110 @@
-"""jit'd public wrapper for the flash-attention kernel.
+"""Differentiable jit'd public wrapper for the flash-attention kernels.
 
-Handles the model-facing layout (B, S, H, D) + GQA head grouping + padding
-to block multiples, and falls back to interpret mode off-TPU (this container
-is CPU: interpret=True executes the kernel body in Python for validation).
+``flash_attention`` is a ``jax.custom_vjp`` at the model-facing layout
+(q: (B, S, H, D); k, v: (B, S, KV, D) with H = KV * G):
+
+* forward: expands KV heads to Q heads (GQA), flattens to (B*H, S, D), pads
+  the sequence to a block multiple (padded tail keys masked via
+  ``valid_len``), and runs the fused Pallas forward — saving the
+  ``(q, k, v, o, lse)`` residuals with k/v kept *unexpanded*, so the k/v
+  share of residual memory scales with KV heads, not Q heads (o and lse
+  are per-Q-head by nature).
+* backward: re-expands/pads, runs the three Pallas backward kernels
+  (preprocess delta, dQ, dK/dV — see kernel.py), then accumulates the
+  per-Q-head dK/dV back to the (B, S, KV, D) layout by summing over each
+  KV head's group of G query heads.
+
+Off-TPU the kernels run in interpret mode (this container is CPU:
+``interpret=True`` executes the kernel body in Python for validation);
+``jax.grad`` through ``flash_attention`` therefore works on every backend.
 """
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.kernel import (flash_attention_bwd,
+                                                  flash_attention_fwd)
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _flatten(x: jax.Array, g: int, pad: int) -> jax.Array:
+    """(B, S, Hx, D) -> (B*Hx*g, S+pad, D): GQA-expand, head-major, pad."""
+    b, s, h, d = x.shape
+    if g > 1:
+        x = jnp.repeat(x, g, axis=2)
+    x = x.transpose(0, 2, 1, 3).reshape(b * h * g, s, d)
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    return x
+
+
+def _unflatten(x: jax.Array, b: int, s: int) -> jax.Array:
+    """(B*H, S_pad, D) -> (B, S, H, D): unpad, head-minor."""
+    bh, s_pad, d = x.shape
+    return x[:, :s, :].reshape(b, bh // b, s, d).transpose(0, 2, 1, 3)
+
+
+def _prep(q, k, v, block_q, block_k):
+    """Shared fwd/bwd prologue: resolve blocks + padding, flatten q/k/v.
+
+    Returns (g, bq, bk, pad, qf, kf, vf) — the one definition of the layout
+    the residuals are saved in and the backward re-derives.
+    """
+    s = q.shape[1]
+    g = q.shape[2] // k.shape[2]
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    # the padded length must be divisible by *both* blocks, not just the
+    # larger one (e.g. s=96, bq=64, bk=96 needs lcm padding, not zero)
+    pad = (-s) % math.lcm(bq, bk)
+    return (g, bq, bk, pad, _flatten(q, 1, pad), _flatten(k, g, pad),
+            _flatten(v, g, pad))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, block_q, block_k, interpret):
+    out, _ = _flash_fwd(q, k, v, causal, block_q, block_k, interpret)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, block_q, block_k, interpret):
+    b, s = q.shape[:2]
+    g, bq, bk, pad, qf, kf, vf = _prep(q, k, v, block_q, block_k)
+    of, lse = flash_attention_fwd(qf, kf, vf, causal=causal, block_q=bq,
+                                  block_k=bk, valid_len=s,
+                                  interpret=interpret)
+    out = _unflatten(of, b, s)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, block_q, block_k, interpret, res, do):
+    q, k, v, out, lse = res
+    b, s, _, d = q.shape
+    kv = k.shape[2]
+    g, bq, bk, pad, qf, kf, vf = _prep(q, k, v, block_q, block_k)
+    of = _flatten(out, 1, pad)
+    dof = _flatten(do, 1, pad)
+    dqf, dkf, dvf = flash_attention_bwd(
+        qf, kf, vf, of, lse, dof, causal=causal, block_q=bq, block_k=bk,
+        valid_len=s, interpret=interpret)
+    dq = _unflatten(dqf, b, s)
+    # accumulate per-Q-head dK/dV over each KV head's group of G query
+    # heads — in fp32, so bf16 inputs don't compound rounding over G adds
+    dk = (_unflatten(dkf, b, s).astype(jnp.float32)
+          .reshape(b, s, kv, g, d).sum(axis=3))
+    dv = (_unflatten(dvf, b, s).astype(jnp.float32)
+          .reshape(b, s, kv, g, d).sum(axis=3))
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
@@ -24,27 +113,11 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, block_q: int = 128,
                     block_k: int = 128,
                     interpret: bool | None = None) -> jax.Array:
-    """q: (B, S, H, D); k, v: (B, S, KV, D) with H = KV * G. Returns like q."""
+    """q: (B, S, H, D); k, v: (B, S, KV, D) with H = KV * G. Returns like q.
+
+    Differentiable end-to-end: ``jax.grad`` routes through the Pallas
+    backward kernels via the custom VJP above.
+    """
     if interpret is None:
         interpret = not _on_tpu()
-    b, s, h, d = q.shape
-    kv = k.shape[2]
-    g = h // kv
-    # expand KV heads to match Q heads (GQA); layout to (B*H, S, D)
-    kx = jnp.repeat(k, g, axis=2)
-    vx = jnp.repeat(v, g, axis=2)
-    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
-    kf = kx.transpose(0, 2, 1, 3).reshape(b * h, s, d)
-    vf = vx.transpose(0, 2, 1, 3).reshape(b * h, s, d)
-    bq = min(block_q, s)
-    bk = min(block_k, s)
-    pad = (-s) % max(bq, bk)
-    if pad:
-        qf = jnp.pad(qf, ((0, 0), (0, pad), (0, 0)))
-        kf = jnp.pad(kf, ((0, 0), (0, pad), (0, 0)))
-        vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0)))
-    out = flash_attention_fwd(qf, kf, vf, causal=causal, block_q=bq,
-                              block_k=bk, valid_len=s, interpret=interpret)
-    if pad:
-        out = out[:, :s, :]
-    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    return _flash(q, k, v, causal, block_q, block_k, interpret)

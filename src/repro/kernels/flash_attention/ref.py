@@ -22,3 +22,21 @@ def attention_reference(q: jax.Array, k: jax.Array, v: jax.Array, *,
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+def attention_reference_gqa(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                            causal: bool = True) -> jax.Array:
+    """Model-layout oracle: q (B, S, H, D); k, v (B, S, KV, D), H = KV * G.
+
+    The one place the GQA expand/flatten layout is defined alongside the
+    dense reference — tests and benchmarks diff kernel outputs/grads
+    against this instead of hand-rolling the transpose each time.
+    """
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = jnp.repeat(k, g, 2).transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vf = jnp.repeat(v, g, 2).transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    o = attention_reference(qf, kf, vf, causal=causal)
+    return o.reshape(b, h, s, d).transpose(0, 2, 1, 3)

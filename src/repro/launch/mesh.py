@@ -14,15 +14,15 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from repro.distributed.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     import jax
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-        devices=jax.devices()[: int(np.prod(shape))])
+    return make_mesh(shape, axes,
+                     devices=jax.devices()[: int(np.prod(shape))])
 
 
 def make_host_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
@@ -30,10 +30,7 @@ def make_host_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     used by the mini-mesh integration tests."""
     import jax
     n = int(np.prod(shape))
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-        devices=jax.devices()[:n])
+    return make_mesh(shape, axes, devices=jax.devices()[:n])
 
 
 def dp_size(mesh) -> int:

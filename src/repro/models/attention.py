@@ -1,9 +1,16 @@
-"""GQA attention: blockwise online-softmax (train/prefill) + cached decode.
+"""GQA attention: flash/blockwise train-prefill backends + cached decode.
 
-The blockwise path keeps peak memory at O(S * block) instead of O(S^2) — the
-TPU-native replacement for "the GPU kernel would have streamed KV" — and is
-also the pure-jnp oracle for the Pallas flash-attention kernel
-(`repro.kernels.flash_attention`).
+Two train/prefill backends, selected by ``ModelConfig.attn_backend``:
+
+* ``blockwise`` — jnp online-softmax scan over KV blocks.  Peak memory is
+  O(S * block) instead of O(S^2) and it is fully differentiable through
+  XLA; it doubles as the pure-jnp oracle for the kernel below.
+* ``flash`` — the Pallas flash-attention kernel
+  (``repro.kernels.flash_attention``), now differentiable end-to-end via
+  ``jax.custom_vjp`` (fused forward emitting logsumexp residuals + three
+  backward kernels), so ``jax.value_and_grad`` in the train step runs the
+  kernel in both directions.  On non-TPU backends "flash" falls back to
+  blockwise; "flash_interpret" forces the kernel in interpret mode (tests).
 """
 from __future__ import annotations
 
@@ -14,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels.flash_attention.ops import flash_attention
 from repro.models.layers import ParamDef, apply_rope, rms_norm
 
 NEG_INF = -1e30
@@ -105,12 +113,40 @@ def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.astype(q.dtype)
 
 
+def _context(q: jax.Array, k: jax.Array, v: jax.Array, cfg: ModelConfig,
+             block_kv: int) -> jax.Array:
+    """Backend dispatch for the train/prefill context computation.
+
+    ``cfg.attn_backend`` selects between the jnp blockwise scan (the oracle)
+    and the differentiable Pallas flash-attention kernel.  "flash" uses the
+    compiled kernel only on TPU and falls back to blockwise elsewhere, so
+    full-scale presets remain lowerable/compilable on any backend (e.g. the
+    CPU dry-run); "flash_interpret" forces the kernel in interpret mode —
+    the CPU validation path the gradient tests and the flash train-step
+    smoke test run.
+    """
+    backend = cfg.attn_backend
+    if backend == "flash" and jax.default_backend() == "tpu":
+        return flash_attention(q, k, v, causal=True)
+    if backend == "flash_interpret":
+        return flash_attention(q, k, v, causal=True, interpret=True)
+    if backend not in ("blockwise", "flash"):
+        raise ValueError(f"unknown attn_backend {backend!r}")
+    return blockwise_attention(q, k, v, causal=True, block_kv=block_kv)
+
+
 def full_attention(params: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
                    positions: jax.Array, block_kv: int = 512
                    ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
-    """Causal self-attention over the whole sequence. Returns (out, (k, v))."""
+    """Causal self-attention over the whole sequence. Returns (out, (k, v)).
+
+    Routes through ``cfg.attn_backend`` (see ``_context``): the training
+    step (``jax.value_and_grad`` in launch/steps.py) and the serve prefill
+    both reach the Pallas kernel — forward *and* backward — when "flash" is
+    selected on TPU.
+    """
     q, k, v = _project_qkv(params, x, cfg, positions)
-    ctx = blockwise_attention(q, k, v, causal=True, block_kv=block_kv)
+    ctx = _context(q, k, v, cfg, block_kv)
     out = jnp.einsum("bshk,hkd->bsd", ctx, params["wo"].astype(x.dtype))
     return out, (k, v)
 

@@ -69,6 +69,7 @@ def test_flash_decode_sharded_matches_reference():
     assert "FLASH_DECODE_OK" in out
 
 
+@pytest.mark.slow
 def test_compressed_allreduce_error_feedback_converges():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
@@ -91,6 +92,7 @@ def test_compressed_allreduce_error_feedback_converges():
     assert "COMPRESS_OK" in out
 
 
+@pytest.mark.slow
 def test_mini_mesh_dryrun_train_and_decode():
     """A scaled-down replica of the production dry-run on 8 fake devices:
     the same code path the 256/512-chip run uses (lower+compile+analyze)."""

@@ -1,30 +1,54 @@
-"""Property tests for the pacing functions (hypothesis)."""
-import hypothesis.strategies as st
+"""Property tests for the pacing functions.
+
+Runs under hypothesis when it is installed; otherwise falls back to a
+deterministic built-in case sweep over the same config domains (this
+container does not ship hypothesis, and the invariants are cheap enough
+to check on a few hundred sampled configs either way).
+"""
+import random
+
 import pytest
-from hypothesis import given, settings
 
 from repro.configs.base import SLWConfig
 from repro.core import pacing
 
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
-@st.composite
-def slw_configs(draw):
-    full = draw(st.sampled_from([256, 1024, 2048, 4096, 32768]))
-    s0 = draw(st.sampled_from([4, 8, 16, 64]))
-    return SLWConfig(
-        enabled=True,
-        pacing=draw(st.sampled_from(["linear", "root", "two_stage"])),
-        start_seq_len=min(s0, full),
-        duration_steps=draw(st.integers(1, 50_000)),
-        round_multiple=draw(st.sampled_from([8, 128])),
-        max_buckets=draw(st.integers(4, 64)),
-    ), full
+FULLS = [256, 1024, 2048, 4096, 32768]
+STARTS = [4, 8, 16, 64]
+PACINGS = ["linear", "root", "two_stage"]
+ROUNDS = [8, 128]
 
 
-@given(slw_configs())
-@settings(max_examples=200, deadline=None)
-def test_ladder_invariants(cfg_full):
-    cfg, full = cfg_full
+def _builtin_cases(n=96, seed=0):
+    """Deterministic stand-in for the hypothesis strategy."""
+    rng = random.Random(seed)
+    cases = []
+    for _ in range(n):
+        full = rng.choice(FULLS)
+        s0 = rng.choice(STARTS)
+        cfg = SLWConfig(
+            enabled=True,
+            pacing=rng.choice(PACINGS),
+            start_seq_len=min(s0, full),
+            duration_steps=rng.randint(1, 50_000),
+            round_multiple=rng.choice(ROUNDS),
+            max_buckets=rng.randint(4, 64),
+        )
+        cases.append((cfg, full))
+    return cases
+
+
+# ---------------------------------------------------------------------------
+# invariant bodies (shared by both drivers)
+# ---------------------------------------------------------------------------
+
+def _check_ladder_invariants(cfg, full):
     ladder = pacing.bucket_ladder(cfg, full)
     assert len(ladder) <= cfg.max_buckets + 8  # geometric prefix allowance
     assert ladder == tuple(sorted(set(ladder)))
@@ -32,19 +56,13 @@ def test_ladder_invariants(cfg_full):
     assert ladder[-1] == full
 
 
-@given(slw_configs(), st.integers(0, 100_000))
-@settings(max_examples=200, deadline=None)
-def test_seqlen_bounds(cfg_full, step):
-    cfg, full = cfg_full
+def _check_seqlen_bounds(cfg, full, step):
     s = pacing.seqlen_at(cfg, step, full)
     assert cfg.start_seq_len <= s + cfg.round_multiple  # never far below s0
     assert s <= full
 
 
-@given(slw_configs())
-@settings(max_examples=100, deadline=None)
-def test_monotone_nondecreasing(cfg_full):
-    cfg, full = cfg_full
+def _check_monotone_nondecreasing(cfg, full):
     if cfg.pacing == "two_stage":
         return  # discrete jump is monotone by construction, tested below
     ladder = pacing.bucket_ladder(cfg, full)
@@ -56,12 +74,74 @@ def test_monotone_nondecreasing(cfg_full):
         prev = s
 
 
-@given(slw_configs())
-@settings(max_examples=100, deadline=None)
-def test_reaches_full_length_after_duration(cfg_full):
-    cfg, full = cfg_full
+def _check_reaches_full_length(cfg, full):
     assert pacing.seqlen_at(cfg, cfg.duration_steps + 1, full) == full
 
+
+# ---------------------------------------------------------------------------
+# drivers
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def slw_configs(draw):
+        full = draw(st.sampled_from(FULLS))
+        s0 = draw(st.sampled_from(STARTS))
+        return SLWConfig(
+            enabled=True,
+            pacing=draw(st.sampled_from(PACINGS)),
+            start_seq_len=min(s0, full),
+            duration_steps=draw(st.integers(1, 50_000)),
+            round_multiple=draw(st.sampled_from(ROUNDS)),
+            max_buckets=draw(st.integers(4, 64)),
+        ), full
+
+    @given(slw_configs())
+    @settings(max_examples=200, deadline=None)
+    def test_ladder_invariants(cfg_full):
+        _check_ladder_invariants(*cfg_full)
+
+    @given(slw_configs(), st.integers(0, 100_000))
+    @settings(max_examples=200, deadline=None)
+    def test_seqlen_bounds(cfg_full, step):
+        _check_seqlen_bounds(cfg_full[0], cfg_full[1], step)
+
+    @given(slw_configs())
+    @settings(max_examples=100, deadline=None)
+    def test_monotone_nondecreasing(cfg_full):
+        _check_monotone_nondecreasing(*cfg_full)
+
+    @given(slw_configs())
+    @settings(max_examples=100, deadline=None)
+    def test_reaches_full_length_after_duration(cfg_full):
+        _check_reaches_full_length(*cfg_full)
+
+else:
+    CASES = _builtin_cases()
+
+    def test_ladder_invariants():
+        for cfg, full in CASES:
+            _check_ladder_invariants(cfg, full)
+
+    def test_seqlen_bounds():
+        rng = random.Random(1)
+        for cfg, full in CASES:
+            for step in (0, 1, cfg.duration_steps // 2, cfg.duration_steps,
+                         cfg.duration_steps + 1, rng.randint(0, 100_000)):
+                _check_seqlen_bounds(cfg, full, step)
+
+    def test_monotone_nondecreasing():
+        for cfg, full in CASES[:48]:
+            _check_monotone_nondecreasing(cfg, full)
+
+    def test_reaches_full_length_after_duration():
+        for cfg, full in CASES:
+            _check_reaches_full_length(cfg, full)
+
+
+# ---------------------------------------------------------------------------
+# exact-value tests (no property machinery)
+# ---------------------------------------------------------------------------
 
 def test_paper_linear_formula_exact():
     """seqlen_t = s0 + (s1-s0)*min(t/T,1), rounded down to the ladder."""

@@ -1,7 +1,13 @@
-"""System-level behaviour: the paper's recipe end to end (fast versions;
-the full stability comparisons live in benchmarks/)."""
+"""System-level behaviour: the paper's recipe end to end (reduced versions;
+the full stability comparisons live in benchmarks/).
+
+Whole module is `slow` tier: each test is a real multi-bucket training run
+(minutes on the 1-core container).  Run with `pytest -m slow`.
+"""
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.slow
 
 from repro.configs import get_arch, reduced
 from repro.configs.base import (BatchWarmupConfig, OptimizerConfig, SLWConfig,
@@ -9,7 +15,7 @@ from repro.configs.base import (BatchWarmupConfig, OptimizerConfig, SLWConfig,
 from repro.launch.train import train
 
 
-def _tc(slw: bool, steps=30, lr=2e-3, pacing="linear", batch_warmup=False,
+def _tc(slw: bool, steps=24, lr=2e-3, pacing="linear", batch_warmup=False,
         schedule="token_cosine"):
     cfg = reduced(get_arch("gpt2-117m").model).replace(vocab_size=256)
     seq, batch = 128, 8
@@ -21,7 +27,7 @@ def _tc(slw: bool, steps=30, lr=2e-3, pacing="linear", batch_warmup=False,
             total_tokens=steps * batch * seq),
         slw=SLWConfig(enabled=slw, pacing=pacing, start_seq_len=8,
                       duration_steps=steps // 2, round_multiple=8,
-                      max_buckets=8),
+                      max_buckets=5),
         batch_warmup=BatchWarmupConfig(
             enabled=batch_warmup, start_batch=2,
             warmup_tokens=steps * batch * seq // 4),
@@ -31,9 +37,9 @@ def _tc(slw: bool, steps=30, lr=2e-3, pacing="linear", batch_warmup=False,
 def test_slw_recipe_end_to_end():
     """Full recipe: pacing + truncation + token-wise LR + token budget."""
     res = train(_tc(slw=True), quiet=True)
-    assert res.steps == 30
+    assert res.steps == 24
     # token budget respected: SLW saw fewer tokens than steps*batch*seq
-    assert res.tokens < 30 * 8 * 128
+    assert res.tokens < 24 * 8 * 128
     # seqlen ramps to full
     assert res.seqlen_history[0] < res.seqlen_history[-1] == 128
     # validation perplexity is finite and recorded at full length
@@ -48,7 +54,7 @@ def test_baseline_and_related_work_arms_run():
                    dict(slw=True, pacing="two_stage"),
                    dict(slw=False, batch_warmup=True)):
         res = train(_tc(**kwargs), quiet=True)
-        assert res.steps == 30, kwargs
+        assert res.steps == 24, kwargs
         assert np.isfinite(res.loss_history[-1]) or res.diverged
 
 
