@@ -2,7 +2,10 @@
 
 On this CPU container interpret mode measures *correctness* plumbing, not
 TPU speed; the derived column reports the max |err| vs the oracle and the
-analytic FLOPs the kernel would execute on the TPU target.
+analytic FLOPs the kernel would execute on the TPU target.  Every
+differentiable kernel (flash attention, ssd, wkv6) gets a fwd row and a
+fwd+bwd row (jax.grad through the custom_vjp, grad max-err vs the oracle
+gradients).
 """
 from __future__ import annotations
 
@@ -69,31 +72,73 @@ def run(quick: bool = False) -> List[Row]:
                  f"causal_tpu_flops={2.5 * tpu_flops:.2e}"))
 
     # ssd
-    b2, h2, s2, p2, n2 = 1, 2, 256, 32, 16
+    b2, h2, s2, p2, n2, ck = 1, 2, 256, 32, 16, 64
     x = jax.random.normal(ks[3], (b2, h2, s2, p2))
     dt = jax.nn.softplus(jax.random.normal(ks[4], (b2, h2, s2)))
     a = -jnp.exp(jax.random.normal(ks[5], (h2,)) * 0.5)
     bi = jax.random.normal(ks[6], (b2, s2, n2))
     ci = jax.random.normal(ks[7], (b2, s2, n2))
-    f_ssd = lambda: ssd(x, dt, a, bi, ci, chunk=64, interpret=True)
+    f_ssd = lambda: ssd(x, dt, a, bi, ci, chunk=ck, interpret=True)
     us = _timeit(lambda *_: f_ssd())
     y, st = f_ssd()
-    yr, sr = ssd_fwd_reference(x, dt, a, bi, ci, chunk=64)
+    yr, sr = ssd_fwd_reference(x, dt, a, bi, ci, chunk=ck)
     err = float(jnp.max(jnp.abs(y - yr)))
-    rows.append(("kernels/ssd_interp", us, f"max_err={err:.2e}"))
+    # per chunk: scores/intra (2 Q^2 (N+P) MACs) + inter/state (4 Q N P)
+    ssd_flops = 2 * b2 * h2 * s2 * (ck * (n2 + p2) + 2 * n2 * p2)
+    rows.append(("kernels/ssd_interp", us,
+                 f"max_err={err:.2e} tpu_flops={ssd_flops:.2e}"))
+
+    # ssd fwd+bwd (custom_vjp through the Pallas reverse-scan kernel)
+    wy = jax.random.normal(ks[0], (b2, h2, s2, p2))
+
+    def _loss_ssd(fn):
+        return lambda *t: jnp.sum(fn(*t)[0] * wy)
+
+    grad_ssd = jax.jit(jax.grad(_loss_ssd(lambda *t: ssd(
+        *t, chunk=ck, interpret=True)), (0, 1, 2, 3, 4)))
+    us = _timeit(grad_ssd, x, dt, a, bi, ci)
+    gs = grad_ssd(x, dt, a, bi, ci)
+    gr = jax.grad(_loss_ssd(lambda *t: ssd_fwd_reference(*t, chunk=ck)),
+                  (0, 1, 2, 3, 4))(x, dt, a, bi, ci)
+    gerr = max(float(jnp.max(jnp.abs(g - r_))) for g, r_ in zip(gs, gr))
+    # bwd recomputes the fwd tile and runs ~2x the fwd matmul work for the
+    # five cotangents — analytic ≈ 3x fwd flops
+    rows.append(("kernels/ssd_bwd_interp", us,
+                 f"grad_max_err={gerr:.2e} tpu_flops={3 * ssd_flops:.2e}"))
 
     # wkv6
-    r = jax.random.normal(ks[0], (1, 2, 128, 16))
-    kk = jax.random.normal(ks[1], (1, 2, 128, 16))
-    vv = jax.random.normal(ks[2], (1, 2, 128, 16))
-    lw = -jnp.exp(jax.random.normal(ks[3], (1, 2, 128, 16)) * 0.5)
-    u = jax.random.normal(ks[4], (2, 16)) * 0.5
-    f_wkv = lambda: wkv6(r, kk, vv, lw, u, chunk=32, interpret=True)
+    bw, hw, sw, dw, ckw = 1, 2, 128, 16, 32
+    r = jax.random.normal(ks[0], (bw, hw, sw, dw))
+    kk = jax.random.normal(ks[1], (bw, hw, sw, dw))
+    vv = jax.random.normal(ks[2], (bw, hw, sw, dw))
+    lw = -jnp.exp(jax.random.normal(ks[3], (bw, hw, sw, dw)) * 0.5)
+    u = jax.random.normal(ks[4], (hw, dw)) * 0.5
+    f_wkv = lambda: wkv6(r, kk, vv, lw, u, chunk=ckw, interpret=True)
     us = _timeit(lambda *_: f_wkv())
     y, st = f_wkv()
     yr, sr = wkv6_sequential(r, kk, vv, lw, u)
     err = float(jnp.max(jnp.abs(y - yr)))
-    rows.append(("kernels/wkv6_interp", us, f"max_err={err:.2e}"))
+    # per chunk: (Q,Q,D) pairwise tensor (2 Q^2 D) + att@v (Q^2 D) + state
+    # in/out (4 Q D^2)
+    wkv_flops = 2 * bw * hw * sw * (3 * ckw * dw // 2 + 2 * dw * dw)
+    rows.append(("kernels/wkv6_interp", us,
+                 f"max_err={err:.2e} tpu_flops={wkv_flops:.2e}"))
+
+    # wkv6 fwd+bwd (custom_vjp through the Pallas reverse-scan kernel)
+    wyk = jax.random.normal(ks[5], (bw, hw, sw, dw))
+
+    def _loss_wkv(fn):
+        return lambda *t: jnp.sum(fn(*t)[0] * wyk)
+
+    grad_wkv = jax.jit(jax.grad(_loss_wkv(lambda *t: wkv6(
+        *t, chunk=ckw, interpret=True)), (0, 1, 2, 3, 4)))
+    us = _timeit(grad_wkv, r, kk, vv, lw, u)
+    gs = grad_wkv(r, kk, vv, lw, u)
+    gr = jax.grad(_loss_wkv(wkv6_sequential), (0, 1, 2, 3, 4))(r, kk, vv,
+                                                               lw, u)
+    gerr = max(float(jnp.max(jnp.abs(g - r_))) for g, r_ in zip(gs, gr))
+    rows.append(("kernels/wkv6_bwd_interp", us,
+                 f"grad_max_err={gerr:.2e} tpu_flops={3 * wkv_flops:.2e}"))
 
     # XLA-path blockwise attention (the production fallback) for scale
     from repro.models.attention import blockwise_attention

@@ -59,6 +59,13 @@ class ModelConfig:
     ssm_expand: int = 2
     ssm_chunk: int = 128
     conv_kernel: int = 4
+    # SSD train/prefill backend (mirrors attn_backend):
+    #   reference        – pure-jnp chunked scan (the oracle; default)
+    #   kernel           – Pallas SSD kernel (fwd + custom-VJP bwd) on TPU;
+    #                      silently falls back to reference off-TPU so
+    #                      presets stay lowerable anywhere
+    #   kernel_interpret – force the kernel in interpret mode (CPU tests)
+    ssm_backend: str = "reference"
     # hybrid (zamba2): one *shared* attention+MLP block applied every attn_every
     # SSM layers (shared weights, per-application KV cache)
     attn_every: int = 0
@@ -66,6 +73,9 @@ class ModelConfig:
     rwkv_head_dim: int = 64
     rwkv_lora_rank: int = 64
     rwkv_chunk: int = 64
+    # WKV train/prefill backend: reference | kernel | kernel_interpret
+    # (same semantics as ssm_backend)
+    rwkv_backend: str = "reference"
     # modality frontend stubs (backbone-only per the assignment):
     #   none           – token LM
     #   audio_frames   – input_specs provide precomputed frame embeddings (B,S,D)

@@ -15,6 +15,7 @@ MODEL = ModelConfig(
     vocab_size=65536,
     rwkv_head_dim=64,
     norm="layernorm",
+    rwkv_backend="kernel",  # Pallas WKV fwd+bwd on TPU (reference off-TPU)
 )
 
 SPEC = ArchSpec(

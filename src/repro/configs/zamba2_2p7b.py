@@ -19,6 +19,7 @@ MODEL = ModelConfig(
     ssm_head_dim=64,
     ssm_expand=2,
     attn_every=6,  # 54 / 6 = 9 shared-block applications
+    ssm_backend="kernel",  # Pallas SSD fwd+bwd on TPU (reference off-TPU)
 )
 
 SPEC = ArchSpec(

@@ -8,11 +8,63 @@ public wrapper, interpret-mode fallback off-TPU), ref.py (pure-jnp oracle).
   Differentiable: custom_vjp over fused fwd (o + logsumexp) and three
   Pallas bwd kernels (delta preprocess, dQ, dK/dV) — selected on the
   training hot path via ``ModelConfig.attn_backend = "flash"``.
-* ssd             — Mamba-2 chunked SSD scan (zamba2 backbone, long_500k);
-  forward-only (bwd falls back to XLA AD of the reference — see ROADMAP)
+* ssd             — Mamba-2 chunked SSD scan (zamba2 backbone, long_500k).
+  Differentiable: custom_vjp over a carry-emitting fwd and a fused
+  reverse-chunk-scan bwd kernel — selected via
+  ``ModelConfig.ssm_backend = "kernel"``.
 * rwkv6           — chunked WKV with data-dependent per-channel decay;
-  forward-only likewise
+  likewise differentiable (``ModelConfig.rwkv_backend = "kernel"``).
+
+The shared backend/interpret resolution lives here so the three ops.py
+wrappers agree on one rule: kernels compile only on real TPU; everywhere
+else they run in interpret mode (Python evaluation of the kernel body —
+slow, but it makes ``jax.grad`` through every kernel testable on CPU).
 """
-from repro.kernels.flash_attention.ops import flash_attention  # noqa: F401
-from repro.kernels.rwkv6.ops import wkv6  # noqa: F401
-from repro.kernels.ssd.ops import ssd  # noqa: F401
+import jax
+
+
+def on_tpu() -> bool:
+    """True iff the default JAX backend is a real TPU."""
+    return jax.default_backend() == "tpu"
+
+
+def resolve_interpret(interpret: "bool | None") -> bool:
+    """Resolve an ``interpret: bool | None`` kernel argument.
+
+    ``None`` (the default everywhere) means "compiled on TPU, interpret
+    mode elsewhere"; an explicit ``True``/``False`` is passed through
+    untouched (tests force ``True``; TPU perf runs may force ``False``).
+    """
+    return not on_tpu() if interpret is None else interpret
+
+
+def resolve_backend(backend: str, field: str) -> "tuple[bool, bool]":
+    """Map a model-config kernel-backend value to (use_kernel, interpret).
+
+    One rule for ``ssm_backend`` and ``rwkv_backend`` (``field`` only names
+    the offender in the error): "kernel" compiles on TPU and falls back to
+    the jnp reference elsewhere; "kernel_interpret" forces interpret mode
+    (CPU validation); "reference" never touches the kernel.
+    """
+    if backend not in ("reference", "kernel", "kernel_interpret"):
+        raise ValueError(f"unknown {field} {backend!r}")
+    if backend == "kernel_interpret":
+        return True, True
+    return backend == "kernel" and on_tpu(), False
+
+
+def chunk_padding(s: int, chunk: int) -> "tuple[int, int]":
+    """Clamp ``chunk`` to the sequence length and return (chunk, pad).
+
+    The shared uneven-tail contract of the ssd/wkv6 wrappers: ``pad``
+    zero-extends the sequence to the next chunk multiple (zero inputs with
+    zero log-decay are state-safe in both recurrences), and the wrapper
+    slices the padded rows back off the output.
+    """
+    chunk = min(chunk, s)
+    return chunk, (-s) % chunk
+
+
+from repro.kernels.flash_attention.ops import flash_attention  # noqa: E402,F401
+from repro.kernels.rwkv6.ops import wkv6  # noqa: E402,F401
+from repro.kernels.ssd.ops import ssd  # noqa: E402,F401

@@ -26,12 +26,9 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.flash_attention.kernel import (flash_attention_bwd,
                                                   flash_attention_fwd)
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def _flatten(x: jax.Array, g: int, pad: int) -> jax.Array:
@@ -118,6 +115,5 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     Differentiable end-to-end: ``jax.grad`` routes through the Pallas
     backward kernels via the custom VJP above.
     """
-    if interpret is None:
-        interpret = not _on_tpu()
-    return _flash(q, k, v, causal, block_q, block_k, interpret)
+    return _flash(q, k, v, causal, block_q, block_k,
+                  resolve_interpret(interpret))

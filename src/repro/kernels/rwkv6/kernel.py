@@ -1,11 +1,21 @@
-"""Pallas TPU kernel for the RWKV-6 chunked WKV recurrence.
+"""Pallas TPU kernels for the RWKV-6 chunked WKV recurrence — fwd and bwd.
 
-Grid (B, H, n_chunks), chunk axis minor; the (D, D) per-head state is carried
-in VMEM scratch across chunks.  Per-channel data-dependent decay means the
-intra-chunk pairwise tensor is (Q, Q, D) — kept in registers/VMEM for one
-chunk only (Q<=64), with all exponents non-positive by construction (the
-decays are <= 1 and only backward-in-time products appear), so no secondary
-renormalization is needed.
+Forward — grid (B, H, n_chunks), chunk axis minor; the (D, D) per-head state
+is carried in VMEM scratch across chunks.  Per-channel data-dependent decay
+means the intra-chunk pairwise tensor is (Q, Q, D) — kept in registers/VMEM
+for one chunk only (Q<=64), with all exponents non-positive by construction
+(the decays are <= 1 and only backward-in-time products appear), so no
+secondary renormalization is needed.  With ``return_carries=True`` the
+kernel additionally emits the (B, H, nc, D, D) states entering each chunk —
+the chunk-compressed backward residual.
+
+Backward — the same grid with the chunk axis reversed via the index maps:
+one kernel runs the reverse scan, carrying the (D, D) state cotangent in
+VMEM scratch (seeded from the final-state cotangent).  Per chunk it
+recomputes the (Q, Q, D) pairwise decay tensor from the saved inputs and
+emits dr/dk/dv/d_log_w; du (the per-head current-token bonus) accumulates
+in a second scratch across the whole reverse sweep and is written at the
+final grid step, then summed over batch by ops.py.
 """
 from __future__ import annotations
 
@@ -18,8 +28,12 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
-def _wkv6_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, state_out_ref,
-                 state_scr, *, chunk: int, n_chunks: int):
+def _wkv6_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, *refs, chunk: int,
+                 n_chunks: int, with_carries: bool):
+    if with_carries:
+        y_ref, state_out_ref, carry_ref, state_scr = refs
+    else:
+        (y_ref, state_out_ref, state_scr), carry_ref = refs, None
     ci = pl.program_id(2)
 
     @pl.when(ci == 0)
@@ -51,6 +65,8 @@ def _wkv6_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, state_out_ref,
 
     # carried state: (r_i (.) exp(cum_in_i)) @ S_prev
     state = state_scr[...]                 # (D, D)
+    if carry_ref is not None:
+        carry_ref[0, 0, 0] = state         # residual: state entering chunk
     y = y + jax.lax.dot_general(r * jnp.exp(cum_in), state,
                                 (((1,), (0,)), ((), ())),
                                 preferred_element_type=jnp.float32)
@@ -69,33 +85,178 @@ def _wkv6_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, state_out_ref,
 
 
 def wkv6_fwd(r: jax.Array, k: jax.Array, v: jax.Array, log_w: jax.Array,
-             u: jax.Array, *, chunk: int = 32, interpret: bool = False):
+             u: jax.Array, *, chunk: int = 32, interpret: bool = False,
+             return_carries: bool = False):
     """r/k/v/log_w: (B, H, S, D); u: (H, D).
-    Returns (y (B,H,S,D), final_state (B,H,D,D))."""
+    Returns (y (B,H,S,D), final_state (B,H,D,D)); with ``return_carries``
+    also the (B,H,nc,D,D) per-chunk entry states (the bwd residual)."""
     b, h, s, d = r.shape
     chunk = min(chunk, s)
     assert s % chunk == 0, (s, chunk)
     nc = s // chunk
 
-    kernel = functools.partial(_wkv6_kernel, chunk=chunk, n_chunks=nc)
+    kernel = functools.partial(_wkv6_kernel, chunk=chunk, n_chunks=nc,
+                               with_carries=return_carries)
     seq_spec = pl.BlockSpec((1, 1, chunk, d), lambda bi, hi, ci: (bi, hi, ci, 0))
-    y, state = pl.pallas_call(
+    out_specs = [
+        seq_spec,
+        pl.BlockSpec((1, 1, d, d), lambda bi, hi, ci: (bi, hi, 0, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((b, h, s, d), r.dtype),
+        jax.ShapeDtypeStruct((b, h, d, d), jnp.float32),
+    ]
+    if return_carries:
+        out_specs.append(pl.BlockSpec((1, 1, 1, d, d),
+                                      lambda bi, hi, ci: (bi, hi, ci, 0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((b, h, nc, d, d), jnp.float32))
+    outs = pl.pallas_call(
         kernel,
         grid=(b, h, nc),
         in_specs=[seq_spec, seq_spec, seq_spec, seq_spec,
                   pl.BlockSpec((1, d), lambda bi, hi, ci: (hi, 0))],
-        out_specs=[
-            seq_spec,
-            pl.BlockSpec((1, 1, d, d), lambda bi, hi, ci: (bi, hi, 0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((b, h, s, d), r.dtype),
-            jax.ShapeDtypeStruct((b, h, d, d), jnp.float32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[_vmem((d, d), jnp.float32)],
         interpret=interpret,
     )(r, k, v, log_w, u)
-    return y, state
+    return tuple(outs)
+
+
+# ---------------------------------------------------------------------------
+# backward
+# ---------------------------------------------------------------------------
+
+def _wkv6_bwd_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, carry_ref, dy_ref,
+                     dstate_ref, dr_ref, dk_ref, dv_ref, dlw_ref, du_ref,
+                     g_scr, du_scr, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(2)  # reversed: index maps serve chunk nc-1-ci
+
+    @pl.when(ci == 0)
+    def _init():  # cotangent of the final-state output seeds the carry
+        g_scr[...] = dstate_ref[0, 0]
+        du_scr[...] = jnp.zeros_like(du_scr)
+
+    r = r_ref[0, 0].astype(jnp.float32)    # (Q, D)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    lw = lw_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)       # (D,)
+    state = carry_ref[0, 0, 0]             # (D, D) state entering chunk
+    dy = dy_ref[0, 0].astype(jnp.float32)  # (Q, D)
+    g = g_scr[...]                         # (D, D) d(chunk-final state)
+
+    # recompute the forward's per-chunk decay geometry
+    cum = jnp.cumsum(lw, axis=0)
+    cum_in = cum - lw
+    e_in = jnp.exp(cum_in)                         # (Q, D)
+    alpha = jnp.exp(cum[-1])                       # (D,)
+    f = jnp.exp(cum[-1][None, :] - cum)            # (Q, D)
+    gap = cum_in[:, None, :] - cum[None, :, :]
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    strict = (iota_i > iota_j)[:, :, None]
+    w_pair = jnp.exp(jnp.where(strict, gap, NEG_INF))  # (Q, Q, D)
+
+    def mm(lhs, rhs, dims):
+        return jax.lax.dot_general(lhs, rhs, (dims, ((), ())),
+                                   preferred_element_type=jnp.float32)
+
+    p = mm(dy, v, ((1,), (1,)))            # (Q, Q): p_ij = dy_i . v_j
+    diag_p = jnp.sum(dy * v, axis=-1)      # (Q,):  p_ii
+
+    att = jnp.einsum("id,ijd,jd->ij", r, w_pair, k)
+    bonus_coef = jnp.sum(r * u[None, :] * k, axis=-1)  # (Q,)
+
+    # dv: intra attention rows + current-token bonus + state-update outer prod
+    dv = (mm(att, dy, ((0,), (0,))) + bonus_coef[:, None] * dy
+          + mm(k * f, g, ((1,), (0,))))
+
+    # dr/dk split by source term — the intra and carried-state parts double
+    # as the decay cotangent below (d log-decay couples through the same
+    # products), so keep them separate until the end
+    dr_intra = jnp.einsum("ijd,jd,ij->id", w_pair, k, p)
+    dr_state = e_in * mm(dy, state, ((1,), (1,)))      # (Q, D)
+    dk_intra = jnp.einsum("ijd,id,ij->jd", w_pair, r, p)
+    dk_state = f * mm(v, g, ((1,), (1,)))              # (Q, D)
+    dr = dr_intra + dr_state + u[None, :] * k * diag_p[:, None]
+    dk = dk_intra + dk_state + u[None, :] * r * diag_p[:, None]
+
+    du_scr[...] += jnp.sum(r * k * diag_p[:, None], axis=0)[None, :]
+
+    # cotangent of the cumulative log-decays: the exclusive cumsum couples
+    # through the pairwise tensor rows and the carried-state decay, the
+    # inclusive one through the pairwise columns, the decay-to-end factors
+    # and (last row only) the state's own decay
+    dcum_in = r * (dr_intra + dr_state)
+    dcum = -(k * (dk_intra + dk_state))
+    last = (jnp.sum(k * dk_state, axis=0)
+            + alpha * jnp.sum(state * g, axis=-1))    # (D,)
+    row = jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)
+    dcum = dcum + jnp.where(row == chunk - 1, last[None, :], 0.0)
+    # cum = cumsum(lw), cum_in = cum - lw =>
+    #   dlw_m = sum_{i >= m} (dcum_i + dcum_in_i) - dcum_in_m
+    total = dcum + dcum_in
+    rev = jnp.sum(total, axis=0, keepdims=True) - jnp.cumsum(total, axis=0) \
+        + total
+    dlw = rev - dcum_in
+
+    dr_ref[0, 0] = dr
+    dk_ref[0, 0] = dk
+    dv_ref[0, 0] = dv
+    dlw_ref[0, 0] = dlw
+
+    # reverse carry into the previous chunk
+    g_scr[...] = alpha[:, None] * g + mm(r * e_in, dy, ((0,), (0,)))
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        du_ref[0, 0] = du_scr[0]
+
+
+def wkv6_bwd(r: jax.Array, k: jax.Array, v: jax.Array, log_w: jax.Array,
+             u: jax.Array, carries: jax.Array, dy: jax.Array,
+             dstate: jax.Array, *, chunk: int, interpret: bool = False):
+    """Reverse chunk scan.  Layouts as ``wkv6_fwd`` plus carries
+    (B,H,nc,D,D), dy (B,H,S,D) and dstate (B,H,D,D) output cotangents.
+
+    Returns fp32 (dr, dk, dv, d_log_w (B,H,S,D), du_part (B,H,D)); du_part
+    is per-(batch, head) and summed over batch by the caller.
+    """
+    b, h, s, d = r.shape
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    kernel = functools.partial(_wkv6_bwd_kernel, chunk=chunk, n_chunks=nc)
+    # the reverse scan: chunk grid axis minor, index maps serve nc-1-ci
+    seq_rev = pl.BlockSpec((1, 1, chunk, d),
+                           lambda bi, hi, ci: (bi, hi, nc - 1 - ci, 0))
+    f32 = jnp.float32
+    dr, dk, dv, dlw, du_part = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            seq_rev, seq_rev, seq_rev, seq_rev,
+            pl.BlockSpec((1, d), lambda bi, hi, ci: (hi, 0)),
+            pl.BlockSpec((1, 1, 1, d, d),
+                         lambda bi, hi, ci: (bi, hi, nc - 1 - ci, 0, 0)),
+            seq_rev,
+            pl.BlockSpec((1, 1, d, d), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_specs=[seq_rev, seq_rev, seq_rev, seq_rev,
+                   pl.BlockSpec((1, 1, d), lambda bi, hi, ci: (bi, hi, 0))],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, s, d), f32),
+            jax.ShapeDtypeStruct((b, h, s, d), f32),
+            jax.ShapeDtypeStruct((b, h, s, d), f32),
+            jax.ShapeDtypeStruct((b, h, s, d), f32),
+            jax.ShapeDtypeStruct((b, h, d), f32),
+        ],
+        scratch_shapes=[_vmem((d, d), jnp.float32),
+                        _vmem((1, d), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, log_w, u, carries, dy, dstate)
+    return dr, dk, dv, dlw, du_part
 
 
 def _vmem(shape, dtype):

@@ -1,20 +1,76 @@
-"""jit'd wrapper for the WKV6 kernel (interpret fallback off-TPU)."""
+"""Differentiable jit'd public wrapper for the WKV6 kernels.
+
+``wkv6`` is a ``jax.custom_vjp`` over the Pallas forward/backward pair in
+kernel.py:
+
+* forward: pads the sequence to a chunk multiple when needed (log_w = 0 /
+  k = 0 pad steps decay by exp(0) = 1 and inject nothing, so the final
+  state is unaffected), runs the carry-emitting forward, and saves
+  ``(r, k, v, log_w, u, carries)`` as residuals.  ``carries`` is the
+  (B, H, nc, D, D) tensor of per-head states *entering* each chunk — the
+  chunk-compressed residual layout: the (Q, Q, D) pairwise decay tensor is
+  recomputed per chunk inside the backward kernel, never materialized at
+  sequence scale.
+* backward: one reverse-chunk-scan Pallas kernel carrying the (D, D)
+  state cotangent in VMEM (seeded with the final-state cotangent),
+  emitting dr/dk/dv/d_log_w per chunk and accumulating the per-head bonus
+  gradient du across the sweep; the only jnp epilogue is the batch-sum of
+  du (u is batch-shared) and the cotangent dtype casts.
+
+Off-TPU the kernels run in interpret mode (see ``resolve_interpret``), so
+``jax.grad`` through ``wkv6`` works on every backend; padding/slicing
+lives *outside* the custom_vjp, so AD handles the uneven-tail case free.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
-from repro.kernels.rwkv6.kernel import wkv6_fwd
+from repro.kernels import chunk_padding, resolve_interpret
+from repro.kernels.rwkv6.kernel import wkv6_bwd, wkv6_fwd
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _wkv6(r, k, v, log_w, u, chunk, interpret):
+    y, state = wkv6_fwd(r, k, v, log_w, u, chunk=chunk, interpret=interpret)
+    return y, state
+
+
+def _wkv6_fwd_rule(r, k, v, log_w, u, chunk, interpret):
+    y, state, carries = wkv6_fwd(r, k, v, log_w, u, chunk=chunk,
+                                 interpret=interpret, return_carries=True)
+    return (y, state), (r, k, v, log_w, u, carries)
+
+
+def _wkv6_bwd_rule(chunk, interpret, res, cts):
+    r, k, v, log_w, u, carries = res
+    dy, dstate = cts
+    dr, dk, dv, dlw, du_part = wkv6_bwd(
+        r, k, v, log_w, u, carries, dy.astype(jnp.float32),
+        dstate.astype(jnp.float32), chunk=chunk, interpret=interpret)
+    return (dr.astype(r.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            dlw.astype(log_w.dtype), du_part.sum(axis=0).astype(u.dtype))
+
+
+_wkv6.defvjp(_wkv6_fwd_rule, _wkv6_bwd_rule)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def wkv6(r, k, v, log_w, u, *, chunk: int = 32, interpret: bool | None = None):
-    """r/k/v/log_w: (B, H, S, D); u: (H, D)."""
-    if interpret is None:
-        interpret = not _on_tpu()
-    return wkv6_fwd(r, k, v, log_w, u, chunk=chunk, interpret=interpret)
+    """r/k/v/log_w: (B, H, S, D); u: (H, D).
+    Returns (y (B,H,S,D), final_state (B,H,D,D)).
+
+    Differentiable end-to-end: ``jax.grad`` routes through the fused Pallas
+    reverse-scan kernel via the custom VJP above.  Sequence lengths that
+    are not chunk multiples are zero-padded (state-safe) and sliced back.
+    """
+    interpret = resolve_interpret(interpret)
+    s = r.shape[2]
+    chunk, pad = chunk_padding(s, chunk)
+    if pad:
+        padw = ((0, 0), (0, 0), (0, pad), (0, 0))
+        r, k, v, log_w = (jnp.pad(t, padw) for t in (r, k, v, log_w))
+    y, state = _wkv6(r, k, v, log_w, u, chunk, interpret)
+    return (y[:, :, :s] if pad else y), state

@@ -1,11 +1,25 @@
-"""Pallas TPU kernel for the Mamba-2 SSD chunked scan.
+"""Pallas TPU kernels for the Mamba-2 SSD chunked scan — forward and backward.
 
-Grid (B, H, n_chunks) with the chunk axis minor — TPU's sequential grid
-execution carries the (N, P) inter-chunk state in VMEM scratch, so the
+Forward — grid (B, H, n_chunks) with the chunk axis minor: TPU's sequential
+grid execution carries the (N, P) inter-chunk state in VMEM scratch, so the
 recurrence never round-trips HBM between chunks (the GPU implementation's
 equivalent trick is a separate state-passing kernel; on TPU the sequential
 grid makes it one kernel).  Per chunk the intra term is two MXU matmuls over
-a (Q, Q) decay-masked score tile.
+a (Q, Q) decay-masked score tile.  With ``return_carries=True`` the kernel
+additionally emits the state *entering* each chunk — a (B, H, nc, N, P)
+tensor, the chunk-compressed residual the backward recomputes from (nc = S/Q
+blocks of the (N, P) state instead of any (S, S) attention-like tensor).
+
+Backward — same grid shape with the chunk axis *reversed* via the index
+maps, so one kernel runs the reverse scan: the (N, P) cotangent of the
+running state is carried in VMEM scratch from the last chunk to the first,
+initialized with the cotangent of the final-state output.  Per chunk it
+recomputes the forward's intra-chunk tile (scores, decay, cumulative
+log-decays) from the saved inputs + carry, then emits all five input
+cotangents.  dB/dC are written per-head (the ops.py wrapper sums over H,
+mirroring the flash-attention GQA accumulation) and dA arrives as the
+log-decay cotangent ``dlog`` (dA = sum_{b,s} dt * dlog per head, reduced in
+ops.py) so the kernel needs no cross-chunk scalar accumulator.
 """
 from __future__ import annotations
 
@@ -18,8 +32,12 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
-def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref,
-                state_scr, *, chunk: int, n_chunks: int):
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, *refs, chunk: int,
+                n_chunks: int, with_carries: bool):
+    if with_carries:
+        y_ref, state_out_ref, carry_ref, state_scr = refs
+    else:
+        (y_ref, state_out_ref, state_scr), carry_ref = refs, None
     ci = pl.program_id(2)
 
     @pl.when(ci == 0)
@@ -48,6 +66,8 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref,
 
     # inter-chunk: C_i exp(cum_i) @ state_prev
     state = state_scr[...]                   # (N, P)
+    if carry_ref is not None:
+        carry_ref[0, 0, 0] = state           # residual: state entering chunk
     c_scaled = cq * jnp.exp(cum)[:, None]
     y = y + jax.lax.dot_general(c_scaled, state, (((1,), (0,)), ((), ())),
                                 preferred_element_type=jnp.float32)
@@ -68,18 +88,32 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref,
 
 def ssd_fwd(x: jax.Array, dt: jax.Array, a_coef: jax.Array, b_in: jax.Array,
             c_in: jax.Array, *, chunk: int = 128,
-            interpret: bool = False):
+            interpret: bool = False, return_carries: bool = False):
     """x: (B, H, S, P); dt: (B, H, S); a_coef: (H,); b_in/c_in: (B, S, N).
-    Returns (y (B,H,S,P), final_state (B,H,N,P))."""
+    Returns (y (B,H,S,P), final_state (B,H,N,P)); with ``return_carries``
+    also the (B,H,nc,N,P) per-chunk entry states (the bwd residual)."""
     b, h, s, p = x.shape
     n = b_in.shape[-1]
     chunk = min(chunk, s)
     assert s % chunk == 0, (s, chunk)
     nc = s // chunk
 
-    kernel = functools.partial(_ssd_kernel, chunk=chunk, n_chunks=nc)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, n_chunks=nc,
+                               with_carries=return_carries)
     dt3 = dt.reshape(b, h, 1, s)  # keep last-two-dims tiling friendly
-    y, state = pl.pallas_call(
+    out_specs = [
+        pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+        pl.BlockSpec((1, 1, n, p), lambda bi, hi, ci: (bi, hi, 0, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((b, h, s, p), x.dtype),
+        jax.ShapeDtypeStruct((b, h, n, p), jnp.float32),
+    ]
+    if return_carries:
+        out_specs.append(pl.BlockSpec((1, 1, 1, n, p),
+                                      lambda bi, hi, ci: (bi, hi, ci, 0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((b, h, nc, n, p), jnp.float32))
+    outs = pl.pallas_call(
         kernel,
         grid=(b, h, nc),
         in_specs=[
@@ -89,18 +123,140 @@ def ssd_fwd(x: jax.Array, dt: jax.Array, a_coef: jax.Array, b_in: jax.Array,
             pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
             pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
         ],
-        out_specs=[
-            pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
-            pl.BlockSpec((1, 1, n, p), lambda bi, hi, ci: (bi, hi, 0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((b, h, s, p), x.dtype),
-            jax.ShapeDtypeStruct((b, h, n, p), jnp.float32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[_vmem((n, p), jnp.float32)],
         interpret=interpret,
     )(x, dt3, a_coef.astype(jnp.float32), b_in, c_in)
-    return y, state
+    return tuple(outs)
+
+
+# ---------------------------------------------------------------------------
+# backward
+# ---------------------------------------------------------------------------
+
+def _ssd_bwd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, carry_ref, dy_ref,
+                    dstate_ref, dx_ref, ddt_ref, dlog_ref, db_ref, dc_ref,
+                    g_scr, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(2)  # reversed: index maps serve chunk nc-1-ci
+
+    @pl.when(ci == 0)
+    def _init():  # cotangent of the final-state output seeds the carry
+        g_scr[...] = dstate_ref[0, 0]
+
+    x = x_ref[0, 0].astype(jnp.float32)       # (Q, P)
+    dt = dt_ref[0, 0][0].astype(jnp.float32)  # (Q,)
+    a = a_ref[0]
+    bq = b_ref[0].astype(jnp.float32)         # (Q, N)
+    cq = c_ref[0].astype(jnp.float32)         # (Q, N)
+    state = carry_ref[0, 0, 0]                # (N, P) state entering chunk
+    dy = dy_ref[0, 0].astype(jnp.float32)     # (Q, P)
+    g = g_scr[...]                            # (N, P) d(chunk-final state)
+
+    # recompute the forward's intra-chunk tile
+    log_decay = dt * a
+    cum = jnp.cumsum(log_decay)               # (Q,) inclusive
+    x_dt = x * dt[:, None]
+    e = jnp.exp(cum)                          # (Q,)  carried-state decay
+    f = jnp.exp(cum[-1] - cum)                # (Q,)  decay-to-chunk-end
+    alpha = e[-1]
+    scores = jax.lax.dot_general(cq, bq, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    gap = cum[:, None] - cum[None, :]
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.exp(jnp.where(iota_i >= iota_j, gap, NEG_INF))
+
+    def mm(lhs, rhs, dims):
+        return jax.lax.dot_general(lhs, rhs, (dims, ((), ())),
+                                   preferred_element_type=jnp.float32)
+
+    # d(x * dt): intra term (M^T dy) + state-update term (f B) G
+    m = scores * decay                        # (Q, Q) causal mixing weights
+    dxdt = mm(m, dy, ((0,), (0,))) + mm(f[:, None] * bq, g, ((1,), (0,)))
+
+    # w_ij = decay_ij * (dy_i . x_dt_j) — shared by dB, dC and the decay grad
+    dyx = mm(dy, x_dt, ((1,), (1,)))          # (Q, Q)
+    w = decay * dyx
+    dc = mm(w, bq, ((1,), (0,))) + e[:, None] * mm(dy, state, ((1,), (1,)))
+    db = mm(w, cq, ((0,), (0,))) + f[:, None] * mm(x_dt, g, ((1,), (1,)))
+
+    # cotangent of the inclusive cumulative log-decay, term by term:
+    #   t = scores (.) w            — the pairwise exp(cum_i - cum_j) factors
+    #   t2 = e_i (C_i S_prev).dy_i  — the carried-state decay
+    #   u = f_j (B_j G).x_dt_j      — the decay-to-end factors (state update)
+    #   alpha <S_prev, G>           — the carried-state factor (last row only)
+    t = scores * w
+    u = f * jnp.sum(mm(bq, g, ((1,), (0,))) * x_dt, axis=-1)
+    t2 = e * jnp.sum(mm(cq, state, ((1,), (0,))) * dy, axis=-1)
+    dcum = t.sum(axis=1) - t.sum(axis=0) + t2 - u
+    last = jnp.sum(u) + alpha * jnp.sum(state * g)
+    row = jax.lax.broadcasted_iota(jnp.int32, (chunk,), 0)
+    dcum = dcum + jnp.where(row == chunk - 1, last, 0.0)
+    # cum = cumsum(log_decay)  =>  dlog_i = sum_{k >= i} dcum_k
+    dlog = jnp.sum(dcum) - jnp.cumsum(dcum) + dcum
+
+    dx_ref[0, 0] = dxdt * dt[:, None]
+    ddt_ref[0, 0] = (a * dlog + jnp.sum(dxdt * x, axis=-1))[None, :]
+    dlog_ref[0, 0] = dlog[None, :]
+    db_ref[0, 0] = db
+    dc_ref[0, 0] = dc
+
+    # reverse carry into the previous chunk
+    g_scr[...] = alpha * g + mm(e[:, None] * cq, dy, ((0,), (0,)))
+
+
+def ssd_bwd(x: jax.Array, dt: jax.Array, a_coef: jax.Array, b_in: jax.Array,
+            c_in: jax.Array, carries: jax.Array, dy: jax.Array,
+            dstate: jax.Array, *, chunk: int, interpret: bool = False):
+    """Reverse chunk scan.  Layouts as ``ssd_fwd`` plus carries (B,H,nc,N,P),
+    dy (B,H,S,P) and dstate (B,H,N,P) — the two output cotangents.
+
+    Returns fp32 (dx (B,H,S,P), ddt (B,H,S), dlog (B,H,S),
+    db_h (B,H,S,N), dc_h (B,H,S,N)): per-head dB/dC (summed over H by the
+    caller) and the log-decay cotangent dlog (dA = sum_{b,s} dt * dlog).
+    """
+    b, h, s, p = x.shape
+    n = b_in.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    kernel = functools.partial(_ssd_bwd_kernel, chunk=chunk, n_chunks=nc)
+    dt3 = dt.reshape(b, h, 1, s)
+    # the reverse scan: chunk grid axis minor, index maps serve nc-1-ci
+    seq_p = pl.BlockSpec((1, 1, chunk, p),
+                         lambda bi, hi, ci: (bi, hi, nc - 1 - ci, 0))
+    seq_dt = pl.BlockSpec((1, 1, 1, chunk),
+                          lambda bi, hi, ci: (bi, hi, 0, nc - 1 - ci))
+    seq_n = pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, nc - 1 - ci, 0))
+    seq_hn = pl.BlockSpec((1, 1, chunk, n),
+                          lambda bi, hi, ci: (bi, hi, nc - 1 - ci, 0))
+    dx, ddt3, dlog3, db_h, dc_h = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            seq_p,
+            seq_dt,
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            seq_n,
+            seq_n,
+            pl.BlockSpec((1, 1, 1, n, p),
+                         lambda bi, hi, ci: (bi, hi, nc - 1 - ci, 0, 0)),
+            seq_p,
+            pl.BlockSpec((1, 1, n, p), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_specs=[seq_p, seq_dt, seq_dt, seq_hn, seq_hn],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, s, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, 1, s), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, 1, s), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, s, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, s, n), jnp.float32),
+        ],
+        scratch_shapes=[_vmem((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt3, a_coef.astype(jnp.float32), b_in, c_in, carries, dy, dstate)
+    return dx, ddt3.reshape(b, h, s), dlog3.reshape(b, h, s), db_h, dc_h
 
 
 def _vmem(shape, dtype):

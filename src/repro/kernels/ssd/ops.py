@@ -1,22 +1,85 @@
-"""jit'd wrapper for the SSD kernel (interpret fallback off-TPU)."""
+"""Differentiable jit'd public wrapper for the SSD kernels.
+
+``ssd`` is a ``jax.custom_vjp`` over the Pallas forward/backward pair in
+kernel.py:
+
+* forward: pads the sequence to a chunk multiple when needed (dt = 0 pad
+  steps decay by exp(0) = 1 and inject nothing, so the final state is
+  unaffected), runs the carry-emitting forward, and saves
+  ``(x, dt, a_coef, b_in, c_in, carries)`` as residuals.  ``carries`` is
+  the (B, H, nc, N, P) tensor of states *entering* each chunk — the
+  chunk-compressed residual layout: everything quadratic-in-chunk the
+  backward needs (scores, decay tile, cumulative log-decays) is recomputed
+  per chunk from the inputs, so nothing O(S^2) or O(S, N, P) beyond the
+  nc inter-chunk carries is ever materialized.
+* backward: one reverse-chunk-scan Pallas kernel carrying the (N, P)
+  state cotangent in VMEM (seeded with the final-state cotangent), then
+  two cheap jnp reductions outside the kernel: dB/dC are emitted per-head
+  and summed over H here (b_in/c_in are head-shared — the same
+  accumulate-outside idiom as flash attention's GQA dK/dV), and the
+  per-head scalar dA = sum_{b,s} dt * dlog contracts the kernel's
+  log-decay cotangent.
+
+Off-TPU the kernels run in interpret mode (see ``resolve_interpret``), so
+``jax.grad`` through ``ssd`` works on every backend; padding/slicing lives
+*outside* the custom_vjp, so AD handles the uneven-tail case for free.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
-from repro.kernels.ssd.kernel import ssd_fwd
+from repro.kernels import chunk_padding, resolve_interpret
+from repro.kernels.ssd.kernel import ssd_bwd, ssd_fwd
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _ssd(x, dt, a_coef, b_in, c_in, chunk, interpret):
+    y, state = ssd_fwd(x, dt, a_coef, b_in, c_in, chunk=chunk,
+                       interpret=interpret)
+    return y, state
+
+
+def _ssd_fwd_rule(x, dt, a_coef, b_in, c_in, chunk, interpret):
+    y, state, carries = ssd_fwd(x, dt, a_coef, b_in, c_in, chunk=chunk,
+                                interpret=interpret, return_carries=True)
+    return (y, state), (x, dt, a_coef, b_in, c_in, carries)
+
+
+def _ssd_bwd_rule(chunk, interpret, res, cts):
+    x, dt, a_coef, b_in, c_in, carries = res
+    dy, dstate = cts
+    dx, ddt, dlog, db_h, dc_h = ssd_bwd(
+        x, dt, a_coef, b_in, c_in, carries, dy.astype(jnp.float32),
+        dstate.astype(jnp.float32), chunk=chunk, interpret=interpret)
+    da = jnp.einsum("bhs,bhs->h", dt.astype(jnp.float32), dlog)
+    return (dx.astype(x.dtype), ddt.astype(dt.dtype), da.astype(a_coef.dtype),
+            db_h.sum(axis=1).astype(b_in.dtype),
+            dc_h.sum(axis=1).astype(c_in.dtype))
+
+
+_ssd.defvjp(_ssd_fwd_rule, _ssd_bwd_rule)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd(x, dt, a_coef, b_in, c_in, *, chunk: int = 128,
         interpret: bool | None = None):
-    """x: (B, H, S, P); dt: (B, H, S); a_coef: (H,); b_in/c_in: (B, S, N)."""
-    if interpret is None:
-        interpret = not _on_tpu()
-    return ssd_fwd(x, dt, a_coef, b_in, c_in, chunk=chunk,
-                   interpret=interpret)
+    """x: (B, H, S, P); dt: (B, H, S); a_coef: (H,); b_in/c_in: (B, S, N).
+    Returns (y (B,H,S,P), final_state (B,H,N,P)).
+
+    Differentiable end-to-end: ``jax.grad`` routes through the fused Pallas
+    reverse-scan kernel via the custom VJP above.  Sequence lengths that
+    are not chunk multiples are zero-padded (state-safe) and sliced back.
+    """
+    interpret = resolve_interpret(interpret)
+    s = x.shape[2]
+    chunk, pad = chunk_padding(s, chunk)
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, 0), (0, pad)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+    y, state = _ssd(x, dt, a_coef, b_in, c_in, chunk, interpret)
+    return (y[:, :, :s] if pad else y), state

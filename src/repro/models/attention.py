@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import on_tpu
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.models.layers import ParamDef, apply_rope, rms_norm
 
@@ -126,7 +127,7 @@ def _context(q: jax.Array, k: jax.Array, v: jax.Array, cfg: ModelConfig,
     smoke test run.
     """
     backend = cfg.attn_backend
-    if backend == "flash" and jax.default_backend() == "tpu":
+    if backend == "flash" and on_tpu():
         return flash_attention(q, k, v, causal=True)
     if backend == "flash_interpret":
         return flash_attention(q, k, v, causal=True, interpret=True)

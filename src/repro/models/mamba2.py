@@ -4,7 +4,8 @@ The chunked scan (`ssd_reference`) is the pure-jnp oracle for the Pallas
 kernel in ``repro/kernels/ssd``.  Everything runs inside a single
 ``lax.scan`` over chunks so the intra-chunk quadratic tensors stay
 O(B*H*Q^2) regardless of sequence length — this is what makes the 500K-token
-cells tractable.
+cells tractable.  ``ssd_mix`` dispatches between this oracle and the
+differentiable Pallas kernel per ``ModelConfig.ssm_backend``.
 """
 from __future__ import annotations
 
@@ -17,6 +18,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import constrain
+from repro.kernels import resolve_backend
+from repro.kernels.ssd.ops import ssd
 from repro.models.layers import ParamDef, rms_norm
 
 NEG_INF = -1e30
@@ -90,6 +93,27 @@ def ssd_reference(x: jax.Array, dt: jax.Array, a_coef: jax.Array,
     final_state, ys = jax.lax.scan(step, state0, xs)
     y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)
     return y.astype(x.dtype), final_state
+
+
+def ssd_mix(xh: jax.Array, dt: jax.Array, a_coef: jax.Array,
+            b_in: jax.Array, c_in: jax.Array, cfg: ModelConfig
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Backend dispatch for the SSD scan at the model layout.
+
+    xh (B,S,H,P), dt (B,S,H), b_in/c_in (B,S,N); returns
+    (y (B,S,H,P), final_state (B,H,N,P)).  ``cfg.ssm_backend`` selects the
+    differentiable Pallas kernel ("kernel": compiled, TPU only, reference
+    fallback elsewhere; "kernel_interpret": forced interpret mode for CPU
+    validation) or the jnp oracle ("reference") — so both the train step
+    and the serve prefill run the kernel fwd+bwd when opted in.
+    """
+    use_kernel, interpret = resolve_backend(cfg.ssm_backend, "ssm_backend")
+    if use_kernel:
+        y, state = ssd(xh.transpose(0, 2, 1, 3), dt.transpose(0, 2, 1),
+                       a_coef, b_in, c_in, chunk=cfg.ssm_chunk,
+                       interpret=interpret)
+        return y.transpose(0, 2, 1, 3), state
+    return ssd_reference(xh, dt, a_coef, b_in, c_in, cfg.ssm_chunk)
 
 
 def ssd_decode_step(state: jax.Array, x: jax.Array, dt: jax.Array,
@@ -195,7 +219,7 @@ def mamba2_block(lp: Dict[str, Any], x: jax.Array, cfg: ModelConfig
                          + lp["dt_bias"].astype(jnp.float32))
     a_coef = -jnp.exp(lp["a_log"].astype(jnp.float32))
     xh = x_conv.reshape(b, s, h, p)
-    y, _state = ssd_reference(xh, dt, a_coef, b_conv, c_conv, cfg.ssm_chunk)
+    y, _state = ssd_mix(xh, dt, a_coef, b_conv, c_conv, cfg)
     y = y + lp["d_skip"].astype(y.dtype)[None, None, :, None] * xh
     y = y.reshape(b, s, d_inner)
     y = rms_norm(y * jax.nn.silu(z), lp["norm_gate"]["scale"], cfg.norm_eps)

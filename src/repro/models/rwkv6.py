@@ -5,7 +5,8 @@ oracle for ``repro/kernels/rwkv6``): within a chunk the pairwise per-channel
 decay tensor is materialized directly (safe exponents: decays <= 1 appear as
 exp of non-positive numbers only), and across chunks the (H, D, D) state is
 carried by a scan.  Decode state is O(1) per layer — this is why rwkv6-7b
-runs the long_500k cell.
+runs the long_500k cell.  ``wkv6_mix`` dispatches between this oracle and
+the differentiable Pallas kernel per ``ModelConfig.rwkv_backend``.
 """
 from __future__ import annotations
 
@@ -18,6 +19,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import constrain
+from repro.kernels import resolve_backend
+from repro.kernels.rwkv6.ops import wkv6
 from repro.models.layers import (
     ParamDef, apply_norm, cast, cross_entropy_loss, layer_norm,
     maybe_checkpoint, maybe_scan, norm_def, round_up, stack_defs)
@@ -88,6 +91,25 @@ def wkv6_reference(r: jax.Array, k: jax.Array, v: jax.Array,
     final_state, ys = jax.lax.scan(step, state0, (rc, kc, vc, lw))
     out = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, d)
     return out.astype(r.dtype), final_state
+
+
+def wkv6_mix(r: jax.Array, k: jax.Array, v: jax.Array, log_w: jax.Array,
+             u: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Backend dispatch for the WKV scan at the model layout.
+
+    r/k/v/log_w (B,S,H,D), u (H,D); returns (y (B,S,H,D), final_state
+    (B,H,D,D)).  ``cfg.rwkv_backend`` selects the differentiable Pallas
+    kernel ("kernel": compiled, TPU only, reference fallback elsewhere;
+    "kernel_interpret": forced interpret mode for CPU validation) or the
+    jnp oracle ("reference") — train and prefill both route through it.
+    """
+    use_kernel, interpret = resolve_backend(cfg.rwkv_backend, "rwkv_backend")
+    if use_kernel:
+        tr = lambda t: t.transpose(0, 2, 1, 3)  # (B,S,H,D) <-> (B,H,S,D)
+        y, state = wkv6(tr(r), tr(k), tr(v), tr(log_w), u,
+                        chunk=cfg.rwkv_chunk, interpret=interpret)
+        return tr(y), state
+    return wkv6_reference(r, k, v, log_w, u, cfg.rwkv_chunk)
 
 
 def wkv6_decode_step(state: jax.Array, r: jax.Array, k: jax.Array,
@@ -172,7 +194,7 @@ def rwkv6_time_mix(lp, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     xn = layer_norm(x, lp["ln1"]["scale"], lp["ln1"]["bias"], cfg.norm_eps)
     x_prev = jnp.concatenate([jnp.zeros_like(xn[:, :1]), xn[:, :-1]], axis=1)
     r, k, v, g, log_w = _time_mix_inputs(lp, xn, x_prev, cfg)
-    y, _state = wkv6_reference(r, k, v, log_w, lp["u"], cfg.rwkv_chunk)
+    y, _state = wkv6_mix(r, k, v, log_w, lp["u"], cfg)
     y = _group_norm_heads(y.reshape(b, s, d), lp["ln_x"]["scale"],
                           lp["ln_x"]["bias"], h, cfg.norm_eps)
     y = (y.astype(x.dtype) * g) @ lp["wo"].astype(x.dtype)
@@ -339,7 +361,7 @@ class RWKV6LM:
             x_prev = jnp.concatenate([jnp.zeros_like(xn[:, :1]), xn[:, :-1]],
                                      axis=1)
             r, k, v, g, log_w = _time_mix_inputs(lp, xn, x_prev, cfg)
-            y, state = wkv6_reference(r, k, v, log_w, lp["u"], cfg.rwkv_chunk)
+            y, state = wkv6_mix(r, k, v, log_w, lp["u"], cfg)
             y = _group_norm_heads(y.reshape(b, s, d), lp["ln_x"]["scale"],
                                   lp["ln_x"]["bias"], nh, cfg.norm_eps)
             h = h + (y.astype(h.dtype) * g) @ lp["wo"].astype(h.dtype)

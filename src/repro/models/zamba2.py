@@ -140,8 +140,7 @@ class Zamba2LM:
                                  + lp["dt_bias"].astype(jnp.float32))
             a_coef = -jnp.exp(lp["a_log"].astype(jnp.float32))
             xh = x_conv.reshape(b, s, nh, p)
-            y, state = mamba2.ssd_reference(xh, dt, a_coef, b_conv, c_conv,
-                                            cfg.ssm_chunk)
+            y, state = mamba2.ssd_mix(xh, dt, a_coef, b_conv, c_conv, cfg)
             y = y + lp["d_skip"].astype(y.dtype)[None, None, :, None] * xh
             y = y.reshape(b, s, d_inner)
             y = mamba2.rms_norm(y * jax.nn.silu(z), lp["norm_gate"]["scale"],

@@ -19,13 +19,7 @@ FAMILIES = ["smollm-360m",
             "gpt2-117m"]
 
 
-@pytest.mark.parametrize("arch", FAMILIES)
-def test_decode_matches_prefill(arch):
-    cfg = reduced(get_arch(arch).model)
-    if cfg.family == "moe":
-        # consistency holds modulo capacity drops: decode rows (s=1) never
-        # drop, prefill rows can — compare with a drop-free capacity
-        cfg = cfg.replace(capacity_factor=8.0)
+def _check_decode_matches_prefill(cfg):
     model = build_model(cfg, dtype=jnp.float32, remat="none")
     params = init_params(jax.random.PRNGKey(0), cfg)
     tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 15), 0,
@@ -42,3 +36,29 @@ def test_decode_matches_prefill(arch):
          for t in range(7, 15)], 1)
     np.testing.assert_allclose(np.asarray(dec), np.asarray(oracle),
                                atol=3e-3, rtol=3e-3)
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_decode_matches_prefill(arch):
+    cfg = reduced(get_arch(arch).model)
+    if cfg.family == "moe":
+        # consistency holds modulo capacity drops: decode rows (s=1) never
+        # drop, prefill rows can — compare with a drop-free capacity
+        cfg = cfg.replace(capacity_factor=8.0)
+    _check_decode_matches_prefill(cfg)
+
+
+# prefill through the Pallas kernels (interpret mode) vs the O(1) pure-jnp
+# decode step: the cross-backend serving consistency contract.  The 7-token
+# prompt and 1..8-token oracle prefixes are all shorter than the reduced
+# chunk sizes, so the kernels' uneven-tail padding path runs throughout.
+KERNEL_BACKED = [("rwkv6-7b", {"rwkv_backend": "kernel_interpret"}),
+                 ("zamba2-2.7b", {"ssm_backend": "kernel_interpret"})]
+
+
+@pytest.mark.parametrize("arch,overrides",
+                         [pytest.param(a, o, id=f"{a}-{list(o)[0]}")
+                          for a, o in KERNEL_BACKED])
+def test_decode_matches_kernel_prefill(arch, overrides):
+    cfg = reduced(get_arch(arch).model).replace(**overrides)
+    _check_decode_matches_prefill(cfg)
