@@ -51,8 +51,20 @@ def run(quick: bool = False) -> List[Row]:
     tuned = tune_slw(probe, SLWConfig(round_multiple=8, max_buckets=12),
                      warmup_steps=warmup, seqlen_s_grid=(8, 16, 32),
                      t_multiple_range=(1, 8))
+    # open-loop replay of the tuned schedule through the regulator stack:
+    # the exact warmup token cost, no training needed
+    import dataclasses
+    from repro.core.regulators import predict_trajectory
+    tc_tuned = dataclasses.replace(
+        bench_config(slw=True, lr=lr, steps=steps, warmup_steps=warmup),
+        slw=SLWConfig(enabled=True, start_seq_len=tuned.seqlen_s,
+                      duration_steps=tuned.duration, round_multiple=8,
+                      max_buckets=12))
+    plans = predict_trajectory(tc_tuned, tuned.duration)
+    warmup_tokens = sum(p.batch_size * p.seq_len for p in plans)
     rows.append(("fig3/low_cost_tuner", 0.0,
                  f"chose seqlen_s={tuned.seqlen_s} T={tuned.duration} "
                  f"after {tuned.probe_runs} short probes "
-                 f"(no full trainings)"))
+                 f"(no full trainings); predicted warmup cost "
+                 f"{warmup_tokens} tokens"))
     return rows

@@ -13,12 +13,21 @@ from __future__ import annotations
 from typing import List
 
 from benchmarks.common import (Row, bench_config, run_arm, stability_row)
+from repro.configs.base import RegulatorSpec
+from repro.core.regulators import auto_specs
 
 MODERATE_LR = 6e-3
 # Calibrated on this container: fp32 + tiny params + global clip suppress
 # spikes until LR ~0.3-0.8; 0.5 is the regime where the paper's phenomenology
 # (frequent loss-ratio spikes, SLW suppressing them) reproduces.
 AGGRESSIVE_LR = 0.5
+
+
+def _with_throttle(tc):
+    import dataclasses
+    return dataclasses.replace(
+        tc, regulators=auto_specs(tc)
+        + (RegulatorSpec(kind="var_lr_throttle"),))
 
 
 def run(quick: bool = False) -> List[Row]:
@@ -44,6 +53,11 @@ def run(quick: bool = False) -> List[Row]:
         ("table1/slw_variance_gated",
          bench_config(slw=True, lr=AGGRESSIVE_LR, steps=steps, duration=dur,
                       pacing="variance_gated")),
+        # beyond-paper: LR throttled by the Adam variance-max precursor
+        # instead of (or on top of) the seqlen curriculum
+        ("table1/baseline_var_lr_throttle",
+         _with_throttle(bench_config(slw=False, lr=AGGRESSIVE_LR,
+                                     steps=steps))),
     ]
     rows = []
     for name, tc in arms:

@@ -51,8 +51,8 @@ def run(quick: bool = False) -> List[Row]:
                      total_tokens=steps * BATCH * SEQ))
     # earliest eval point where SLW matches baseline quality
     hit_step, hit_tokens = None, None
-    tok_per_step = np.cumsum(
-        [s * BATCH for s in slw.seqlen_history])
+    tok_per_step = np.cumsum(  # exact per-step plan from the control plane
+        [s * b for s, b in zip(slw.seqlen_history, slw.batch_history)])
     for st, ppl in slw.val_ppl_history:
         if ppl <= target:
             hit_step = st

@@ -34,6 +34,11 @@ def run(quick: bool = False) -> List[Row]:
         ("table4/slw_hugeLR",
          bench_config(slw=True, lr=HUGE_LR, steps=steps,
                       duration=steps // 3, total_tokens=budget)),
+        # the paper's actual joint recipe, expressible since the regulator
+        # control plane: SLW + batch warmup + token-wise LR warmup at once
+        ("table4/slw+bszwarmup_hugeLR",
+         bench_config(slw=True, lr=HUGE_LR, steps=steps, batch_warmup=True,
+                      duration=steps // 3, total_tokens=budget)),
     ]
     finals = {}
     for name, tc in arms:

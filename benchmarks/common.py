@@ -17,7 +17,8 @@ import numpy as np
 
 from repro.configs import get_arch, reduced
 from repro.configs.base import (BatchWarmupConfig, ModelConfig,
-                                OptimizerConfig, SLWConfig, TrainConfig)
+                                OptimizerConfig, RegulatorSpec, SLWConfig,
+                                TrainConfig)
 from repro.launch.train import TrainResult, train
 
 Row = Tuple[str, float, str]  # (name, us_per_call, derived)
@@ -39,7 +40,12 @@ def bench_config(slw: bool = False, lr: float = 1e-3, steps: int = 150,
                  schedule: str = "token_cosine", warmup_steps: int = 15,
                  seq: int = SEQ, batch: int = BATCH, grad_clip: float = 1.0,
                  mode: str = "truncate", seed: int = 1234,
-                 total_tokens: int = 0) -> TrainConfig:
+                 total_tokens: int = 0,
+                 regulators: Tuple[RegulatorSpec, ...] = ()) -> TrainConfig:
+    """One bench arm.  `slw` and `batch_warmup` now *compose* through the
+    regulator stack (the paper's joint recipe is both at once); `regulators`
+    overrides the auto-derived stack entirely (e.g. to add the adaptive
+    beyond-paper regulators)."""
     return TrainConfig(
         model=BENCH_MODEL,
         optimizer=OptimizerConfig(
@@ -55,6 +61,7 @@ def bench_config(slw: bool = False, lr: float = 1e-3, steps: int = 150,
         batch_warmup=BatchWarmupConfig(
             enabled=batch_warmup, start_batch=max(batch // 4, 1),
             warmup_tokens=(duration or steps // 3) * batch * seq // 2),
+        regulators=regulators,
         seq_len=seq, global_batch=batch, seed=seed, remat="none",
         eval_interval=10)
 

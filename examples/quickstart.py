@@ -1,10 +1,13 @@
-"""Quickstart: train a small GPT-2-style model with Sequence Length Warmup.
+"""Quickstart: train a small GPT-2-style model with the paper's joint
+recipe — Sequence Length Warmup composed with batch-size and LR warmup
+through the regulator control plane.
 
     PYTHONPATH=src python examples/quickstart.py [--steps 120]
 
 What you should see: the per-step sequence length ramping 8 -> 256 on the
-paper's linear pacing function, the loss-ratio tracker staying spike-free,
-and validation perplexity (always full-length) dropping.
+paper's linear pacing function while the batch ramps up alongside it, the
+loss-ratio tracker staying spike-free, and validation perplexity (always
+full-length) dropping.
 """
 import argparse
 import sys
@@ -12,7 +15,8 @@ import sys
 sys.path.insert(0, "src")
 
 from repro.configs import get_arch, reduced
-from repro.configs.base import OptimizerConfig, SLWConfig, TrainConfig
+from repro.configs.base import (BatchWarmupConfig, OptimizerConfig, SLWConfig,
+                                TrainConfig)
 from repro.launch.train import train
 
 
@@ -42,6 +46,10 @@ def main():
         slw=SLWConfig(enabled=True, pacing="linear", start_seq_len=8,
                       duration_steps=steps // 3, round_multiple=8,
                       max_buckets=12),
+        # composes with SLW through the regulator stack (the paper's
+        # joint recipe: short sequences make the warming batch/LR safe)
+        batch_warmup=BatchWarmupConfig(enabled=True, start_batch=batch // 2,
+                                       warmup_tokens=steps * batch * seq // 8),
         seq_len=seq, global_batch=batch, remat="none", eval_interval=20)
 
     res = train(tc, quiet=False)
@@ -50,6 +58,8 @@ def main():
           f"compiles={res.n_compiles} (bounded by the bucket ladder)")
     print(f"seqlen schedule: {res.seqlen_history[0]} -> "
           f"{res.seqlen_history[-1]}")
+    print(f"batch schedule:  {res.batch_history[0]} -> "
+          f"{res.batch_history[-1]}")
     print(f"stability: {res.tracker_summary}")
     print(f"val ppl: {[f'{p:.1f}' for _, p in res.val_ppl_history]}")
 

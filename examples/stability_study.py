@@ -24,6 +24,10 @@ def main():
         ("aggressive baseline", bench_config(slw=False, lr=6e-2, steps=steps)),
         ("aggressive + SLW", bench_config(slw=True, lr=6e-2, steps=steps,
                                           duration=steps // 3)),
+        # the paper's joint recipe, one config since the regulator stack
+        ("aggressive + SLW + bsz", bench_config(slw=True, batch_warmup=True,
+                                                lr=6e-2, steps=steps,
+                                                duration=steps // 3)),
     ]
     print(f"{'case':24s} {'spikes':>7s} {'max_ratio':>10s} "
           f"{'var_max_peak':>13s} {'final_loss':>11s}")

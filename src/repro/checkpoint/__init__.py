@@ -1,6 +1,7 @@
 from repro.checkpoint.checkpoint import (  # noqa: F401
     CheckpointManager,
     latest_step,
+    migrate_host_state,
     restore,
     save,
 )

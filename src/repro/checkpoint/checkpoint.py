@@ -116,6 +116,29 @@ def restore(directory: str, step: int, like: Any,
     return jax.tree_util.tree_unflatten(treedef, out), manifest["host"]
 
 
+def migrate_host_state(host: Dict) -> Dict:
+    """Upgrade a legacy host dict to the unified controller format.
+
+    Pre-regulator checkpoints carried per-object payloads
+    (``{"curriculum": ..., "tracker": ...}``); the control plane now
+    checkpoints one ``controller`` dict (see core.regulators.ControllerState).
+    Legacy curriculum state maps onto the ``seqlen`` regulator's slot.
+    """
+    if "controller" in host:
+        return host
+    out = dict(host)
+    regs = {}
+    if "curriculum" in host:
+        regs["seqlen"] = host["curriculum"]
+    out["controller"] = {
+        "step": host.get("step", 0),
+        "tokens_seen": host.get("tokens_seen", 0),
+        "regulators": regs,
+        "tracker": host.get("tracker", {}),
+    }
+    return out
+
+
 class CheckpointManager:
     """keep-N garbage collection + convenience wrappers."""
 

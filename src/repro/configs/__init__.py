@@ -15,6 +15,7 @@ from repro.configs.base import (
     LM_SHAPES,
     ModelConfig,
     OptimizerConfig,
+    RegulatorSpec,
     ShapeConfig,
     SLWConfig,
     TrainConfig,
@@ -92,6 +93,6 @@ def reduced(model: ModelConfig) -> ModelConfig:
 
 __all__ = [
     "ARCHS", "ASSIGNED", "PAPER", "ArchSpec", "BatchWarmupConfig", "LM_SHAPES",
-    "ModelConfig", "OptimizerConfig", "ShapeConfig", "SLWConfig", "TrainConfig",
-    "get_arch", "reduced",
+    "ModelConfig", "OptimizerConfig", "RegulatorSpec", "ShapeConfig",
+    "SLWConfig", "TrainConfig", "get_arch", "reduced",
 ]

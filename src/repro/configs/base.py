@@ -159,6 +159,41 @@ class BatchWarmupConfig:
 
 
 @dataclass(frozen=True)
+class RegulatorSpec:
+    """One entry in ``TrainConfig.regulators`` — the composable control plane.
+
+    ``kind`` selects the regulator; the remaining fields parameterize the
+    kinds that have no legacy config of their own.  Kinds with a legacy
+    config (``seqlen`` <- SLWConfig, ``batch_warmup`` <- BatchWarmupConfig,
+    ``lr`` <- OptimizerConfig) read their parameters from those configs, so
+    one spec entry is just an opt-in switch for them.
+
+    Kinds:
+      seqlen            — SLW curriculum (pacing + variance gate), SLWConfig
+      batch_warmup      — GPT-3-style linear batch warmup, BatchWarmupConfig
+      lr                — token-/step-wise LR schedule, OptimizerConfig
+      grad_noise_batch  — adaptive batch sizing from the relative std of the
+                          gradient norm (Lau et al.-style telemetry-driven
+                          batch schedule)
+      var_lr_throttle   — multiplicative LR/grad-clip backoff while the Adam
+                          variance max spikes above its trailing mean
+                          (Kosson et al.-style warmup-free LR control)
+    """
+
+    kind: str
+    # grad_noise_batch
+    min_batch: int = 0  # 0 -> full_batch // 8
+    noise_window: int = 16  # EMA horizon (steps) for grad-norm stats
+    noise_target: float = 0.25  # grow batch while rel. grad-norm std exceeds
+    growth: float = 1.5  # multiplicative batch growth per trigger
+    # var_lr_throttle
+    gate: float = 2.0  # throttle when var_max > gate * trailing mean
+    floor: float = 0.1  # never scale LR below floor * scheduled
+    backoff: float = 0.5  # scale *= backoff on a spike
+    recovery: float = 1.2  # scale *= recovery per calm step (capped at 1)
+
+
+@dataclass(frozen=True)
 class OptimizerConfig:
     lr: float = 6e-4
     min_lr: float = 1e-5
@@ -184,6 +219,12 @@ class TrainConfig:
     optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
     slw: SLWConfig = field(default_factory=SLWConfig)
     batch_warmup: BatchWarmupConfig = field(default_factory=BatchWarmupConfig)
+    # Composable control plane (core.regulators).  Empty tuple = derive from
+    # the legacy configs above: seqlen if slw.enabled, batch_warmup if
+    # batch_warmup.enabled, and always the LR schedule — so the paper's
+    # *joint* recipe (SLW + 8x batch + 4x/40x LR warmup) is just "enable
+    # both".  A non-empty tuple overrides the derivation entirely.
+    regulators: Tuple[RegulatorSpec, ...] = ()
     seq_len: int = 1024
     global_batch: int = 512
     seed: int = 1234

@@ -1,6 +1,25 @@
 """The paper's contribution: Sequence Length Warmup + its instrumentation."""
 from repro.core.batch_warmup import BatchWarmup  # noqa: F401
-from repro.core.curriculum import CurriculumState, SLWCurriculum  # noqa: F401
+from repro.core.curriculum import (  # noqa: F401
+    CurriculumState,
+    SLWCurriculum,
+    apply_seqlen,
+)
+from repro.core.regulators import (  # noqa: F401
+    BatchSizeRegulator,
+    ControllerState,
+    GradNoiseBatchRegulator,
+    LRScheduleRegulator,
+    Regulator,
+    RegulatorStack,
+    SeqLenRegulator,
+    StepPlan,
+    StepTelemetry,
+    VarianceLRThrottle,
+    auto_specs,
+    build_stack,
+    predict_trajectory,
+)
 from repro.core.pacing import (  # noqa: F401
     bucket_ladder,
     quantize,

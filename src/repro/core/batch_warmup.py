@@ -17,6 +17,15 @@ import numpy as np
 from repro.configs.base import BatchWarmupConfig
 
 
+def quantize_batch(raw: float, dp_size: int, min_batch: int,
+                   full_batch: int) -> int:
+    """Round down to a multiple of the data-parallel size and clip to
+    [max(min_batch, dp_size), full_batch] — the paper's §5.1 structural
+    constraint, shared by every batch-sizing regulator."""
+    b = int(raw) - int(raw) % dp_size
+    return int(np.clip(b, max(min_batch, dp_size), full_batch))
+
+
 @dataclass
 class BatchWarmup:
     cfg: BatchWarmupConfig
@@ -29,9 +38,8 @@ class BatchWarmup:
         frac = min(tokens_seen / max(self.cfg.warmup_tokens, 1), 1.0)
         raw = self.cfg.start_batch + frac * (self.full_batch
                                              - self.cfg.start_batch)
-        b = int(raw) - int(raw) % self.dp_size
-        return int(np.clip(b, max(self.cfg.start_batch, self.dp_size),
-                           self.full_batch))
+        return quantize_batch(raw, self.dp_size, self.cfg.start_batch,
+                              self.full_batch)
 
     def apply(self, batch: Dict[str, np.ndarray], tokens_seen: int
               ) -> Tuple[Dict[str, np.ndarray], int]:

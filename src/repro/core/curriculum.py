@@ -40,6 +40,41 @@ class CurriculumState:
     var_trailing: float = 0.0  # trailing mean of Adam variance-max
 
 
+def apply_seqlen(batch: Dict[str, np.ndarray], s_t: int,
+                 mode: str = "truncate") -> Tuple[Dict[str, np.ndarray], int]:
+    """Apply sequence length ``s_t`` to a host-side batch.
+
+    Standalone so the trainer can execute a ``StepPlan`` without owning a
+    curriculum object.  Sequence-axis keys are truncated/repacked; a
+    vision-patch prefix (``patch_embeds``) is passed through untouched (SLW
+    warms up only the text segment).  Returns (batch, tokens_this_step),
+    prefix tokens included in the count.
+    """
+    seq_keys = [k for k in ("tokens", "labels", "loss_mask", "frames")
+                if k in batch]
+    full = batch[seq_keys[0]].shape[1]
+    s_t = min(s_t, full)
+    out = dict(batch)
+    if mode == "truncate" or s_t == full:
+        for k in seq_keys:
+            out[k] = batch[k][:, :s_t]
+    elif mode == "repack":
+        folds = full // s_t
+        for k in seq_keys:
+            v = batch[k][:, :folds * s_t]
+            out[k] = v.reshape((v.shape[0] * folds, s_t) + v.shape[2:])
+        if "patch_embeds" in out:
+            out["patch_embeds"] = np.repeat(out["patch_embeds"], folds,
+                                            axis=0)
+    else:
+        raise ValueError(f"unknown SLW mode {mode!r}")
+    tokens = int(np.prod(out[seq_keys[0]].shape[:2]))
+    if "patch_embeds" in out:
+        tokens += int(out["patch_embeds"].shape[0]
+                      * out["patch_embeds"].shape[1])
+    return out, tokens
+
+
 class SLWCurriculum:
     def __init__(self, cfg: SLWConfig, full_seq: int, warmup_steps_hint: int = 0,
                  prefix_tokens: int = 0):
@@ -86,28 +121,7 @@ class SLWCurriculum:
         passed through untouched (SLW warms up only the text segment).
         """
         s_t = self.seqlen_for_step() if seqlen is None else seqlen
-        seq_keys = [k for k in ("tokens", "labels", "loss_mask", "frames")
-                    if k in batch]
-        full = batch[seq_keys[0]].shape[1]
-        s_t = min(s_t, full)
-        out = dict(batch)
-        if self.cfg.mode == "truncate" or s_t == full:
-            for k in seq_keys:
-                out[k] = batch[k][:, :s_t]
-        elif self.cfg.mode == "repack":
-            folds = full // s_t
-            for k in seq_keys:
-                v = batch[k][:, :folds * s_t]
-                out[k] = v.reshape((v.shape[0] * folds, s_t) + v.shape[2:])
-            if "patch_embeds" in out:
-                out["patch_embeds"] = np.repeat(out["patch_embeds"], folds,
-                                                axis=0)
-        else:
-            raise ValueError(f"unknown SLW mode {self.cfg.mode!r}")
-        tokens = int(np.prod(out[seq_keys[0]].shape[:2]))
-        if "patch_embeds" in out:
-            tokens += int(out["patch_embeds"].shape[0] * out["patch_embeds"].shape[1])
-        return out, tokens
+        return apply_seqlen(batch, s_t, self.cfg.mode)
 
     # -- accounting -----------------------------------------------------------
     def step_complete(self, tokens_this_step: int) -> None:

@@ -72,7 +72,13 @@ def bucket_ladder(cfg: SLWConfig, full_len: int) -> Tuple[int, ...]:
         ladder.append(v)
         v += stride * m
     ladder.append(s1)
-    ladder = sorted(set(x for x in ladder if s0 <= x <= s1 or x == s1))
+    # Smallest admissible bucket: s0 itself when s0 is below the rounding
+    # multiple, else s0 rounded *down* to the multiple (the arithmetic
+    # anchor).  Filtering at s0 would delete that anchor whenever s0 is not
+    # a multiple of m, leaving the smallest bucket *above* s0 — early
+    # warmup steps would silently run longer than configured.
+    floor = s0 if s0 < m else s0 - s0 % m
+    ladder = sorted(set(x for x in ladder if floor <= x <= s1 or x == s1))
     return tuple(ladder)
 
 

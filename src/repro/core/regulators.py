@@ -1,0 +1,431 @@
+"""Composable training control plane: regulators -> one StepPlan per step.
+
+The paper's recipe is a *joint* schedule — sequence-length warmup is what
+makes the aggressive 8x-batch / 4x-40x-LR recipe trainable — yet the seed
+trainer hardcoded SLW and batch warmup as mutually exclusive branches and
+computed the LR out of band.  This module turns each schedule into a
+``Regulator``: a small host-side state machine that reads the shared
+per-step :class:`StepTelemetry` and contributes to the :class:`StepPlan`
+(sequence-length bucket, batch size, LR, grad-clip scale) that the trainer
+then executes mechanically.
+
+Composition semantics (deliberately simple, so stacks stay predictable):
+
+* ``seq_len`` and ``batch_size`` contributions fold by **min** — any
+  regulator may hold the step shorter/smaller, none may exceed the full
+  shape (which bounds the jit compile cache exactly as before);
+* the LR schedule regulator **sets** the scheduled value; modifiers after
+  it in the stack (e.g. :class:`VarianceLRThrottle`) **multiply** it.
+
+Regulators run in stack order for both ``plan`` (before the step) and
+``observe`` (after the step, with the step's realized telemetry).  All of
+their state round-trips through one :class:`ControllerState`, which is the
+single host-state payload the checkpoint carries — a restart mid-warmup
+resumes every schedule exactly.
+
+Beyond-paper clients of the same protocol (see PAPERS.md):
+
+* :class:`GradNoiseBatchRegulator` — telemetry-driven batch sizing in the
+  spirit of Lau et al., *Adaptive Batch Size Schedules for Distributed
+  Training of Language Models*: grow the batch only while the relative
+  std of the gradient norm says averaging would help.
+* :class:`VarianceLRThrottle` — Kosson et al.-style warmup-free LR
+  control: multiplicatively back off the LR (and grad clip) while the
+  Adam variance max spikes above its trailing mean, recover when calm.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import (BatchWarmupConfig, OptimizerConfig,
+                                RegulatorSpec, SLWConfig, TrainConfig)
+from repro.core.batch_warmup import BatchWarmup, quantize_batch
+from repro.core.curriculum import SLWCurriculum, apply_seqlen
+from repro.optim.schedule import lr_at
+
+
+# ---------------------------------------------------------------------------
+# shared step records
+# ---------------------------------------------------------------------------
+
+@dataclass
+class StepTelemetry:
+    """What every regulator sees.  ``step``/``tokens_seen`` are the exact
+    host-side counters; the float fields are the *last completed* step's
+    observations when planning (NaN before the first step) and the current
+    step's observations in ``observe``."""
+
+    step: int = 0
+    tokens_seen: int = 0
+    loss: float = float("nan")
+    loss_ratio: float = float("nan")
+    grad_norm: float = float("nan")
+    var_max: float = float("nan")
+    var_l1: float = float("nan")
+
+
+@dataclass
+class StepPlan:
+    """The control decision for one step, executed by the trainer."""
+
+    seq_len: int
+    batch_size: int
+    lr: float
+    grad_clip_scale: float = 1.0
+
+
+@dataclass
+class ControllerState:
+    """Unified checkpointable state of the whole control plane (replaces the
+    per-object ``state_dict`` plumbing: curriculum + tracker + ad-hoc
+    counters each riding the checkpoint separately)."""
+
+    step: int = 0
+    tokens_seen: int = 0
+    regulators: Dict[str, Dict[str, Any]] = field(default_factory=dict)
+    tracker: Dict[str, Any] = field(default_factory=dict)
+
+    def to_host(self) -> Dict[str, Any]:
+        return {"step": self.step, "tokens_seen": self.tokens_seen,
+                "regulators": self.regulators, "tracker": self.tracker}
+
+    @classmethod
+    def from_host(cls, d: Dict[str, Any]) -> "ControllerState":
+        return cls(step=int(d.get("step", 0)),
+                   tokens_seen=int(d.get("tokens_seen", 0)),
+                   regulators=dict(d.get("regulators", {})),
+                   tracker=dict(d.get("tracker", {})))
+
+
+# ---------------------------------------------------------------------------
+# the protocol
+# ---------------------------------------------------------------------------
+
+class Regulator:
+    """Base class; regulators override what they need.  ``name`` keys the
+    regulator's slice of :class:`ControllerState` and must be unique within
+    a stack."""
+
+    name: str = "regulator"
+
+    def plan(self, tele: StepTelemetry, plan: StepPlan) -> StepPlan:
+        return plan
+
+    def observe(self, tele: StepTelemetry, tokens_step: int) -> None:
+        pass
+
+    def state_dict(self) -> Dict[str, Any]:
+        return {}
+
+    def load_state_dict(self, d: Dict[str, Any]) -> None:
+        pass
+
+
+class SeqLenRegulator(Regulator):
+    """SLW curriculum (paper §4) on the protocol: pacing function + bucket
+    ladder + the variance gate, state-carried by the wrapped curriculum."""
+
+    name = "seqlen"
+
+    def __init__(self, cfg: SLWConfig, full_seq: int,
+                 warmup_steps_hint: int = 0, prefix_tokens: int = 0):
+        self.cfg = cfg
+        self.curriculum = SLWCurriculum(
+            cfg, full_seq, warmup_steps_hint=warmup_steps_hint,
+            prefix_tokens=prefix_tokens)
+
+    @property
+    def mode(self) -> str:
+        return self.cfg.mode
+
+    def plan(self, tele: StepTelemetry, plan: StepPlan) -> StepPlan:
+        plan.seq_len = min(plan.seq_len, self.curriculum.seqlen_for_step())
+        return plan
+
+    def observe(self, tele: StepTelemetry, tokens_step: int) -> None:
+        if self.cfg.pacing == "variance_gated" and math.isfinite(tele.var_max):
+            self.curriculum.observe(tele.var_max)
+        self.curriculum.step_complete(tokens_step)
+
+    def state_dict(self) -> Dict[str, Any]:
+        return self.curriculum.state_dict()
+
+    def load_state_dict(self, d: Dict[str, Any]) -> None:
+        self.curriculum.load_state_dict(d)
+
+
+class BatchSizeRegulator(Regulator):
+    """GPT-3-style linear batch warmup (paper §5.1 baseline), quantized to
+    the data-parallel size — the method's structural limitation on a large
+    mesh, now actually engaged because the trainer passes ``dp_size``."""
+
+    name = "batch_warmup"
+
+    def __init__(self, cfg: BatchWarmupConfig, full_batch: int,
+                 dp_size: int = 1):
+        self.warmup = BatchWarmup(cfg, full_batch, dp_size=dp_size)
+
+    def plan(self, tele: StepTelemetry, plan: StepPlan) -> StepPlan:
+        plan.batch_size = min(plan.batch_size,
+                              self.warmup.batch_for_tokens(tele.tokens_seen))
+        return plan
+
+
+class LRScheduleRegulator(Regulator):
+    """Token-wise (paper A.2) / step-wise / constant LR schedule.  Sets the
+    scheduled value; place multiplicative modifiers after it."""
+
+    name = "lr"
+
+    def __init__(self, cfg: OptimizerConfig):
+        self.cfg = cfg
+
+    def plan(self, tele: StepTelemetry, plan: StepPlan) -> StepPlan:
+        plan.lr = lr_at(self.cfg, tele.step, tele.tokens_seen)
+        return plan
+
+
+class GradNoiseBatchRegulator(Regulator):
+    """Adaptive batch sizing from gradient-norm noise (beyond-paper).
+
+    Tracks EMA mean/second-moment of the clipped-gradient norm; while the
+    relative std exceeds ``noise_target`` (gradient estimates are noisy, so
+    more averaging pays for itself — the critical-batch-size argument),
+    grows the batch multiplicatively.  Monotone non-decreasing, quantized
+    to the data-parallel size, capped at the full batch.
+    """
+
+    name = "grad_noise_batch"
+
+    def __init__(self, spec: RegulatorSpec, full_batch: int, dp_size: int = 1):
+        self.spec = spec
+        self.full_batch = full_batch
+        self.dp_size = max(dp_size, 1)
+        self.batch = self._quantize(spec.min_batch or full_batch // 8)
+        self.ema_g = 0.0
+        self.ema_g2 = 0.0
+        self.n_obs = 0
+
+    def _quantize(self, b: float) -> int:
+        return quantize_batch(b, self.dp_size, self.dp_size, self.full_batch)
+
+    def plan(self, tele: StepTelemetry, plan: StepPlan) -> StepPlan:
+        plan.batch_size = min(plan.batch_size, self.batch)
+        return plan
+
+    def observe(self, tele: StepTelemetry, tokens_step: int) -> None:
+        g = tele.grad_norm
+        if not math.isfinite(g):
+            return
+        if self.n_obs == 0:
+            # seed at the first observation — zero-init EMAs would read as
+            # huge relative variance and trigger spurious growth
+            self.ema_g, self.ema_g2 = g, g * g
+        else:
+            a = 2.0 / (self.spec.noise_window + 1.0)
+            self.ema_g = (1 - a) * self.ema_g + a * g
+            self.ema_g2 = (1 - a) * self.ema_g2 + a * g * g
+        self.n_obs += 1
+        if self.n_obs < self.spec.noise_window:
+            return  # EMAs not warmed up yet
+        var = max(self.ema_g2 - self.ema_g ** 2, 0.0)
+        rel_std = math.sqrt(var) / max(self.ema_g, 1e-12)
+        if rel_std > self.spec.noise_target and self.batch < self.full_batch:
+            self.batch = self._quantize(
+                max(self.batch * self.spec.growth, self.batch + self.dp_size))
+
+    def state_dict(self) -> Dict[str, Any]:
+        return {"batch": self.batch, "ema_g": self.ema_g,
+                "ema_g2": self.ema_g2, "n_obs": self.n_obs}
+
+    def load_state_dict(self, d: Dict[str, Any]) -> None:
+        self.batch = int(d["batch"])
+        self.ema_g = float(d["ema_g"])
+        self.ema_g2 = float(d["ema_g2"])
+        self.n_obs = int(d["n_obs"])
+
+
+class VarianceLRThrottle(Regulator):
+    """Warmup-free LR control (beyond-paper): back the LR off
+    multiplicatively while the Adam variance max spikes above ``gate`` x its
+    trailing mean — the paper's §3 spike precursor — and recover when calm.
+    Also tightens the grad clip by the same factor while throttled."""
+
+    name = "var_lr_throttle"
+
+    def __init__(self, spec: RegulatorSpec):
+        self.spec = spec
+        self.scale = 1.0
+        self.trailing = 0.0
+
+    def plan(self, tele: StepTelemetry, plan: StepPlan) -> StepPlan:
+        plan.lr *= self.scale
+        plan.grad_clip_scale *= self.scale
+        return plan
+
+    def observe(self, tele: StepTelemetry, tokens_step: int) -> None:
+        v = tele.var_max
+        if not math.isfinite(v):
+            return
+        if self.trailing == 0.0:
+            self.trailing = v
+        if v > self.spec.gate * self.trailing:
+            self.scale = max(self.scale * self.spec.backoff, self.spec.floor)
+        else:
+            self.scale = min(self.scale * self.spec.recovery, 1.0)
+        self.trailing = 0.9 * self.trailing + 0.1 * v
+
+    def state_dict(self) -> Dict[str, Any]:
+        return {"scale": self.scale, "trailing": self.trailing}
+
+    def load_state_dict(self, d: Dict[str, Any]) -> None:
+        self.scale = float(d["scale"])
+        self.trailing = float(d["trailing"])
+
+
+# ---------------------------------------------------------------------------
+# the stack
+# ---------------------------------------------------------------------------
+
+class RegulatorStack:
+    """Ordered regulators + plan execution.  The trainer's whole control
+    surface: ``plan`` before the step, ``apply`` the plan to the host batch,
+    ``observe`` after, ``controller_state`` into the checkpoint."""
+
+    def __init__(self, regulators: Sequence[Regulator], full_seq: int,
+                 full_batch: int, base_lr: float):
+        names = [r.name for r in regulators]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate regulator names: {names}")
+        self.regulators = list(regulators)
+        self.full_seq = full_seq
+        self.full_batch = full_batch
+        self.base_lr = base_lr
+
+    def __getitem__(self, name: str) -> Regulator:
+        for r in self.regulators:
+            if r.name == name:
+                return r
+        raise KeyError(name)
+
+    def __contains__(self, name: str) -> bool:
+        return any(r.name == name for r in self.regulators)
+
+    @property
+    def seq_mode(self) -> str:
+        return (self["seqlen"].mode if "seqlen" in self else "truncate")
+
+    def plan(self, tele: StepTelemetry) -> StepPlan:
+        p = StepPlan(seq_len=self.full_seq, batch_size=self.full_batch,
+                     lr=self.base_lr)
+        for r in self.regulators:
+            p = r.plan(tele, p)
+        return p
+
+    def apply(self, batch: Dict[str, np.ndarray], plan: StepPlan
+              ) -> Tuple[Dict[str, np.ndarray], int]:
+        """Execute the plan host-side: row-slice to the batch size, then
+        truncate/repack to the seqlen bucket.  Returns (batch, tokens)."""
+        first = next(iter(batch.values()))
+        if plan.batch_size < first.shape[0]:
+            batch = {k: v[:plan.batch_size] for k, v in batch.items()}
+        return apply_seqlen(batch, plan.seq_len, self.seq_mode)
+
+    def observe(self, tele: StepTelemetry, tokens_step: int) -> None:
+        for r in self.regulators:
+            r.observe(tele, tokens_step)
+
+    # -- unified checkpoint state -------------------------------------------
+    def controller_state(self, step: int, tokens_seen: int,
+                         tracker_state: Optional[Dict[str, Any]] = None
+                         ) -> ControllerState:
+        return ControllerState(
+            step=step, tokens_seen=tokens_seen,
+            regulators={r.name: r.state_dict() for r in self.regulators},
+            tracker=tracker_state or {})
+
+    def load_controller_state(self, cs: ControllerState) -> None:
+        for r in self.regulators:
+            if r.name in cs.regulators:
+                r.load_state_dict(cs.regulators[r.name])
+
+
+# ---------------------------------------------------------------------------
+# construction from config
+# ---------------------------------------------------------------------------
+
+def auto_specs(tc: TrainConfig) -> Tuple[RegulatorSpec, ...]:
+    """Back-compat derivation from the legacy configs: the enabled legacy
+    schedules compose (they no longer exclude each other) and the LR
+    schedule always runs."""
+    specs: List[RegulatorSpec] = []
+    if tc.slw.enabled:
+        specs.append(RegulatorSpec(kind="seqlen"))
+    if tc.batch_warmup.enabled:
+        specs.append(RegulatorSpec(kind="batch_warmup"))
+    specs.append(RegulatorSpec(kind="lr"))
+    return tuple(specs)
+
+
+def build_stack(tc: TrainConfig, *, dp_size: int = 1,
+                warmup_steps_hint: int = 0,
+                prefix_tokens: int = 0) -> RegulatorStack:
+    """Build the control plane for a TrainConfig.  ``tc.regulators`` is the
+    explicit stack; empty means :func:`auto_specs` (legacy derivation)."""
+    specs = tc.regulators or auto_specs(tc)
+    regs: List[Regulator] = []
+    for spec in specs:
+        if spec.kind == "seqlen":
+            regs.append(SeqLenRegulator(
+                tc.slw, tc.seq_len, warmup_steps_hint=warmup_steps_hint,
+                prefix_tokens=prefix_tokens))
+        elif spec.kind == "batch_warmup":
+            regs.append(BatchSizeRegulator(tc.batch_warmup, tc.global_batch,
+                                           dp_size=dp_size))
+        elif spec.kind == "lr":
+            regs.append(LRScheduleRegulator(tc.optimizer))
+        elif spec.kind == "grad_noise_batch":
+            regs.append(GradNoiseBatchRegulator(spec, tc.global_batch,
+                                                dp_size=dp_size))
+        elif spec.kind == "var_lr_throttle":
+            regs.append(VarianceLRThrottle(spec))
+        else:
+            raise ValueError(f"unknown regulator kind {spec.kind!r}")
+    return RegulatorStack(regs, full_seq=tc.seq_len,
+                          full_batch=tc.global_batch, base_lr=tc.optimizer.lr)
+
+
+def predict_trajectory(tc: TrainConfig, n_steps: int, *, dp_size: int = 1,
+                       warmup_steps_hint: int = 0, prefix_tokens: int = 0
+                       ) -> List[StepPlan]:
+    """Replay the stack's open-loop trajectory without training: the exact
+    (seq_len, batch, lr) sequence the trainer will execute when no
+    telemetry-driven regulator intervenes.  Telemetry-driven regulators see
+    *calm* synthetic telemetry (constant unit var_max/grad_norm), so e.g.
+    variance_gated pacing replays its calm-run envelope rather than sitting
+    at the smallest bucket forever on NaN observations.  Token accounting
+    mirrors the trainer's truncate-mode counting (batch * seqlen per
+    step)."""
+    stack = build_stack(tc, dp_size=dp_size,
+                        warmup_steps_hint=warmup_steps_hint,
+                        prefix_tokens=prefix_tokens)
+    plans: List[StepPlan] = []
+    tokens = 0
+    for step in range(n_steps):
+        tele = StepTelemetry(step=step, tokens_seen=tokens,
+                             var_max=1.0, var_l1=1.0, grad_norm=1.0)
+        plan = stack.plan(tele)
+        plans.append(plan)
+        if stack.seq_mode == "repack":
+            folds = max(tc.seq_len // plan.seq_len, 1)
+            tokens_step = plan.batch_size * folds * plan.seq_len
+        else:
+            tokens_step = plan.batch_size * plan.seq_len
+        stack.observe(dataclasses.replace(tele), tokens_step)
+        tokens += tokens_step
+    return plans

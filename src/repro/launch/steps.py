@@ -24,14 +24,18 @@ from repro.optim import adam
 
 def make_train_step(model, opt_cfg: OptimizerConfig,
                     rules: Optional[ShardingRules] = None):
-    def train_step(state, batch, lr):
+    # `clip_scale` is a runtime scalar so regulators (e.g. the variance LR
+    # throttle) can tighten the clip per step without recompiling; callers
+    # that never pass it get the config constant.
+    def train_step(state, batch, lr, clip_scale=1.0):
         with use_rules(rules):
             def loss_fn(p):
                 return model.loss(p, batch)
 
             (loss, metrics), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(state["params"])
-            grads, gnorm = adam.clip_by_global_norm(grads, opt_cfg.grad_clip)
+            grads, gnorm = adam.clip_by_global_norm(
+                grads, opt_cfg.grad_clip * clip_scale)
             new_params, new_opt, telemetry = adam.adamw_update(
                 state["params"], grads, state["opt"], lr, opt_cfg)
         new_state = {"params": new_params, "opt": new_opt,

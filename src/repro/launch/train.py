@@ -1,17 +1,25 @@
-"""End-to-end trainer: SLW curriculum + token-wise LR + fault tolerance.
+"""End-to-end trainer on the composable regulator control plane.
 
 Usable as a library (`train(cfg, ...)` — the benchmarks drive tiny replicas
 of the paper's experiments through this exact loop) and as a CLI:
 
   PYTHONPATH=src python -m repro.launch.train --arch gpt2-117m --reduced \
-      --steps 200 --batch 16 --seq 256 --slw --duration 100
+      --steps 200 --batch 16 --seq 256 --slw --batch-warmup --duration 100
 
-The loop is the paper's recipe end to end:
-  batch (full length, pre-indexed) -> curriculum truncate/repack ->
-  token-wise LR -> jitted train step (one executable per seqlen bucket) ->
-  loss-ratio + Adam-variance telemetry -> token-budget termination,
-with checkpoint/restart, drain-on-signal and a straggler watchdog wrapped
-around it.
+The loop is the paper's *joint* recipe end to end:
+  regulator stack plans the step (seqlen bucket + batch size + LR +
+  grad-clip scale, from shared StepTelemetry) -> batch (full length,
+  pre-indexed) row-sliced and truncated/repacked host-side -> jitted train
+  step (one executable per (seqlen, batch) bucket) -> loss-ratio +
+  Adam-variance telemetry fed back into the stack -> token-budget
+  termination,
+with checkpoint/restart (one unified ControllerState), drain-on-signal and
+a straggler watchdog as hooks around it.
+
+The `Trainer` class is the control plane host: eval, checkpointing, drain,
+the watchdog and telemetry recording are `TrainerHook`s, so deployments can
+add/remove concerns without forking the loop; `train(tc, ...)` stays as the
+thin functional wrapper every benchmark/test entry point uses.
 """
 from __future__ import annotations
 
@@ -29,14 +37,15 @@ import jax.numpy as jnp
 
 from repro.configs import get_arch, reduced as reduce_cfg
 from repro.configs.base import (
-    BatchWarmupConfig, ModelConfig, OptimizerConfig, SLWConfig, TrainConfig)
-from repro.core import BatchWarmup, LossRatioTracker, SLWCurriculum
-from repro.checkpoint import CheckpointManager
+    BatchWarmupConfig, OptimizerConfig, RegulatorSpec, SLWConfig, TrainConfig)
+from repro.core import LossRatioTracker
+from repro.core.regulators import (ControllerState, RegulatorStack, StepPlan,
+                                   StepTelemetry, build_stack)
+from repro.checkpoint import CheckpointManager, migrate_host_state
 from repro.data import DataPipeline, SyntheticCorpus
 from repro.distributed.fault_tolerance import DrainSignal, StepWatchdog
 from repro.launch import steps as steps_lib
 from repro.models import model_zoo
-from repro.optim import lr_at
 
 
 @dataclass
@@ -47,8 +56,10 @@ class TrainResult:
     drained: bool = False
     wall_time_s: float = 0.0
     loss_history: List[float] = field(default_factory=list)
+    loss_ratios: List[float] = field(default_factory=list)
     lr_history: List[float] = field(default_factory=list)
     seqlen_history: List[int] = field(default_factory=list)
+    batch_history: List[int] = field(default_factory=list)
     var_max_history: List[float] = field(default_factory=list)
     var_l1_history: List[float] = field(default_factory=list)
     grad_norm_history: List[float] = field(default_factory=list)
@@ -58,11 +69,286 @@ class TrainResult:
     n_compiles: int = 0
     restored_from_step: Optional[int] = None
 
-    @property
-    def loss_ratios(self) -> List[float]:
-        return self._ratios
 
-    _ratios: List[float] = field(default_factory=list)
+# ---------------------------------------------------------------------------
+# hooks
+# ---------------------------------------------------------------------------
+
+class TrainerHook:
+    """Cross-cutting trainer concern.  ``on_step_start`` runs before the
+    plan is made (and may call ``trainer.request_drain()``);
+    ``on_step_end`` runs after the regulators observed the completed step.
+    When ``trainer.stopping`` is set (divergence with stop_on_nan), interval
+    work (eval/checkpoint) should be skipped."""
+
+    def on_run_start(self, tr: "Trainer") -> None:
+        pass
+
+    def on_step_start(self, tr: "Trainer") -> None:
+        pass
+
+    def on_step_end(self, tr: "Trainer", tele: StepTelemetry, plan: StepPlan,
+                    metrics: Dict[str, float]) -> None:
+        pass
+
+    def on_run_end(self, tr: "Trainer") -> None:
+        pass
+
+
+class DrainHook(TrainerHook):
+    """Preemption-safe exit: checkpoint at the next step boundary."""
+
+    def __init__(self, drain: Optional[DrainSignal]):
+        self.drain = drain
+
+    def on_step_start(self, tr: "Trainer") -> None:
+        if self.drain is not None and self.drain.should_drain:
+            tr.request_drain()
+
+
+class WatchdogHook(TrainerHook):
+    def on_step_start(self, tr: "Trainer") -> None:
+        tr.watchdog.start()
+
+    def on_step_end(self, tr, tele, plan, metrics) -> None:
+        tr.watchdog.stop()
+
+    def on_run_end(self, tr: "Trainer") -> None:
+        tr.result.watchdog_summary = tr.watchdog.summary()
+
+
+class TelemetryHook(TrainerHook):
+    """Records the per-step histories and drives the user callback."""
+
+    def __init__(self, callback: Optional[Callable[[int, Dict[str, float]],
+                                                   None]] = None):
+        self.callback = callback
+
+    def on_step_end(self, tr, tele, plan, metrics) -> None:
+        res = tr.result
+        res.loss_history.append(tele.loss)
+        res.loss_ratios.append(tele.loss_ratio)
+        res.lr_history.append(plan.lr)
+        res.seqlen_history.append(plan.seq_len)
+        res.batch_history.append(plan.batch_size)
+        res.var_max_history.append(tele.var_max)
+        res.var_l1_history.append(tele.var_l1)
+        res.grad_norm_history.append(tele.grad_norm)
+        if self.callback is not None:
+            self.callback(tele.step, {k: float(v) for k, v in metrics.items()})
+
+    def on_run_end(self, tr: "Trainer") -> None:
+        tr.result.tracker_summary = tr.tracker.summary()
+
+
+class EvalHook(TrainerHook):
+    """Full-length validation every ``eval_interval`` steps."""
+
+    def __init__(self, eval_batch: int = 8, quiet: bool = True):
+        self.eval_batch = eval_batch
+        self.quiet = quiet
+
+    def on_step_end(self, tr, tele, plan, metrics) -> None:
+        interval = tr.tc.eval_interval
+        if tr.stopping or not interval or tr.step % interval != 0:
+            return
+        ev = tr.pipeline.eval_batch(tr.step // interval, self.eval_batch)
+        ppl = float(np.exp(min(float(tr.eval_fn(tr.state["params"], ev)),
+                               30.0)))
+        tr.result.val_ppl_history.append((tr.step, ppl))
+        if not self.quiet:
+            print(f"step {tr.step} tokens {tr.tokens_seen} "
+                  f"loss {tele.loss:.4f} val_ppl {ppl:.2f} "
+                  f"seqlen {plan.seq_len} batch {plan.batch_size} "
+                  f"lr {plan.lr:.2e}", flush=True)
+
+
+class CheckpointHook(TrainerHook):
+    """Periodic + final checkpointing (the drain path saves on its own)."""
+
+    def on_step_end(self, tr, tele, plan, metrics) -> None:
+        if tr.stopping or tr.ckpt is None or not tr.tc.checkpoint_interval:
+            return
+        if tr.step % tr.tc.checkpoint_interval == 0:
+            tr.save_checkpoint()
+
+    def on_run_end(self, tr: "Trainer") -> None:
+        if tr.ckpt is not None and not tr.result.drained:
+            tr.save_checkpoint()
+
+
+# ---------------------------------------------------------------------------
+# trainer
+# ---------------------------------------------------------------------------
+
+class Trainer:
+    """Host-side training control plane around the regulator stack.
+
+    Owns model/optimizer state, the data pipeline, the regulator stack, the
+    loss-ratio tracker and the checkpoint manager; everything else (eval,
+    checkpoint cadence, drain, watchdog, telemetry) is a hook.
+    """
+
+    def __init__(self, tc: TrainConfig, *, dp_size: int = 1,
+                 eval_batch: int = 8, stop_on_nan: bool = True,
+                 drain: Optional[DrainSignal] = None,
+                 callback: Optional[Callable[[int, Dict[str, float]],
+                                             None]] = None,
+                 fail_at_step: Optional[int] = None, quiet: bool = True,
+                 hooks: Optional[List[TrainerHook]] = None):
+        """`hooks` are appended after the default hook set (drain, watchdog,
+        telemetry, eval, checkpoint)."""
+        self.tc = tc
+        self.dp_size = max(dp_size, 1)
+        self.stop_on_nan = stop_on_nan
+        self.fail_at_step = fail_at_step
+        cfg = tc.model
+        self.model = model_zoo.build_model(cfg, dtype=jnp.float32,
+                                           remat=tc.remat)
+        rng = jax.random.PRNGKey(tc.seed)
+        self.state = steps_lib.init_train_state(rng, cfg)
+
+        corpus = SyntheticCorpus(vocab_size=cfg.vocab_size,
+                                 seq_len=tc.seq_len, seed=tc.seed)
+        self.pipeline = DataPipeline(corpus, tc.global_batch, model_cfg=cfg)
+        self.stack: RegulatorStack = build_stack(
+            tc, dp_size=self.dp_size,
+            warmup_steps_hint=tc.optimizer.warmup_steps,
+            prefix_tokens=cfg.prefix_tokens)
+        self.tracker = LossRatioTracker()
+        self.watchdog = StepWatchdog()
+        self.ckpt = (CheckpointManager(tc.checkpoint_dir, tc.keep_checkpoints)
+                     if tc.checkpoint_dir else None)
+
+        self.step_fn = jax.jit(steps_lib.make_train_step(self.model,
+                                                         tc.optimizer),
+                               donate_argnums=(0,))
+        self.eval_fn = jax.jit(lambda p, b: self.model.loss(p, b)[1]["loss"])
+
+        self.result = TrainResult()
+        self.step = 0
+        self.tokens_seen = 0
+        self.stopping = False
+        self._drain_requested = False
+        self._last = StepTelemetry()
+        self._seen_shapes = set()
+
+        # `hooks` extends the defaults (it does not replace them — drain/
+        # callback/eval would silently stop working otherwise)
+        self.hooks: List[TrainerHook] = [
+            DrainHook(drain),
+            WatchdogHook(),
+            TelemetryHook(callback),
+            EvalHook(eval_batch=eval_batch, quiet=quiet),
+            CheckpointHook(),
+        ] + list(hooks or [])
+
+    # -- control signals -----------------------------------------------------
+    def request_drain(self) -> None:
+        self._drain_requested = True
+
+    # -- unified controller state (checkpoint payload) -----------------------
+    def controller_state(self) -> ControllerState:
+        return self.stack.controller_state(self.step, self.tokens_seen,
+                                           self.tracker.state_dict())
+
+    def load_controller_state(self, cs: ControllerState) -> None:
+        self.step = cs.step
+        self.tokens_seen = cs.tokens_seen
+        if cs.tracker:
+            self.tracker.load_state_dict(cs.tracker)
+        self.stack.load_controller_state(cs)
+
+    def save_checkpoint(self) -> None:
+        if self.ckpt is None:
+            return
+        # the controller dict is the single source of truth for host state
+        # (step/tokens_seen live inside it; the manifest's own "step" field
+        # covers human inspection)
+        self.ckpt.save(self.step, self.state,
+                       {"controller": self.controller_state().to_host()})
+
+    def resume(self) -> Optional[int]:
+        """Restore the latest checkpoint, if any.  Returns its step."""
+        if self.ckpt is None:
+            return None
+        like = steps_lib.abstract_train_state(self.tc.model)
+        got_step, got_state, host = self.ckpt.restore_latest(like)
+        if got_step is None:
+            return None
+        self.state = got_state
+        host = migrate_host_state(host)
+        self.load_controller_state(ControllerState.from_host(
+            host["controller"]))
+        self.result.restored_from_step = got_step
+        return got_step
+
+    # -- one training step ---------------------------------------------------
+    def run_step(self) -> Tuple[StepTelemetry, StepPlan, Dict[str, Any]]:
+        tele = dataclasses.replace(self._last, step=self.step,
+                                   tokens_seen=self.tokens_seen)
+        plan = self.stack.plan(tele)
+        batch = self.pipeline.batch_at(self.step)
+        batch, tokens_step = self.stack.apply(batch, plan)
+
+        shape_key = tuple(sorted((k, v.shape) for k, v in batch.items()))
+        if shape_key not in self._seen_shapes:
+            self._seen_shapes.add(shape_key)
+            self.result.n_compiles += 1
+
+        self.state, metrics = self.step_fn(
+            self.state, batch, np.float32(plan.lr),
+            np.float32(plan.grad_clip_scale))
+        loss = float(metrics["loss"])
+        ratio = (self.tracker.update(loss) if math.isfinite(loss)
+                 else float("inf"))
+        post = dataclasses.replace(
+            tele, loss=loss, loss_ratio=ratio,
+            grad_norm=float(metrics["grad_norm"]),
+            var_max=float(metrics["var_max"]),
+            var_l1=float(metrics["var_l1"]))
+        self.stack.observe(post, tokens_step)
+        self.step += 1
+        self.tokens_seen += tokens_step
+        self._last = post
+        return post, plan, metrics
+
+    # -- the loop -------------------------------------------------------------
+    def run(self, max_steps: Optional[int] = None) -> TrainResult:
+        opt_cfg = self.tc.optimizer
+        total_steps = opt_cfg.total_steps or 10**9
+        total_tokens = opt_cfg.total_tokens or 10**18
+        if max_steps is not None:
+            total_steps = min(total_steps, self.step + max_steps)
+
+        t_start = time.time()
+        for h in self.hooks:
+            h.on_run_start(self)
+        while self.step < total_steps and self.tokens_seen < total_tokens:
+            for h in self.hooks:
+                h.on_step_start(self)
+            if self._drain_requested:
+                self.save_checkpoint()
+                self.result.drained = True
+                break
+            if self.fail_at_step is not None and self.step == self.fail_at_step:
+                raise RuntimeError(f"injected failure at step {self.step}")
+
+            tele, plan, metrics = self.run_step()
+
+            if not math.isfinite(tele.loss):
+                self.result.diverged = True
+                self.stopping = self.stop_on_nan
+            for h in self.hooks:
+                h.on_step_end(self, tele, plan, metrics)
+            if self.stopping:
+                break
+        for h in self.hooks:
+            h.on_run_end(self)
+        self.result.steps = self.step
+        self.result.tokens = self.tokens_seen
+        self.result.wall_time_s = time.time() - t_start
+        return self.result
 
 
 def train(tc: TrainConfig,
@@ -73,136 +359,19 @@ def train(tc: TrainConfig,
           drain: Optional[DrainSignal] = None,
           callback: Optional[Callable[[int, Dict[str, float]], None]] = None,
           fail_at_step: Optional[int] = None,
-          quiet: bool = True) -> TrainResult:
+          quiet: bool = True,
+          dp_size: int = 1) -> TrainResult:
     """Run the training loop on the local device(s). Returns full telemetry.
 
-    `fail_at_step` injects a crash (fault-tolerance tests/drills).
+    Thin wrapper over :class:`Trainer` so existing entry points keep
+    working.  `fail_at_step` injects a crash (fault-tolerance tests/drills).
     """
-    cfg = tc.model
-    opt_cfg = tc.optimizer
-    model = model_zoo.build_model(cfg, dtype=jnp.float32, remat=tc.remat)
-    rng = jax.random.PRNGKey(tc.seed)
-    state = steps_lib.init_train_state(rng, cfg)
-
-    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seq_len=tc.seq_len,
-                             seed=tc.seed)
-    pipeline = DataPipeline(corpus, tc.global_batch, model_cfg=cfg)
-    curriculum = SLWCurriculum(tc.slw, tc.seq_len,
-                               warmup_steps_hint=opt_cfg.warmup_steps,
-                               prefix_tokens=cfg.prefix_tokens)
-    bwarm = BatchWarmup(tc.batch_warmup, tc.global_batch)
-    tracker = LossRatioTracker()
-    watchdog = StepWatchdog()
-    ckpt = (CheckpointManager(tc.checkpoint_dir, tc.keep_checkpoints)
-            if tc.checkpoint_dir else None)
-
-    step_fn = jax.jit(steps_lib.make_train_step(model, opt_cfg),
-                      donate_argnums=(0,))
-    eval_fn = jax.jit(lambda p, b: model.loss(p, b)[1]["loss"])
-
-    result = TrainResult()
-    step, tokens_seen = 0, 0
-
-    if resume and ckpt is not None:
-        like = steps_lib.abstract_train_state(cfg)
-        got_step, got_state, host = ckpt.restore_latest(like)
-        if got_step is not None:
-            state = got_state
-            step = host["step"]
-            tokens_seen = host["tokens_seen"]
-            curriculum.load_state_dict(host["curriculum"])
-            tracker.load_state_dict(host["tracker"])
-            result.restored_from_step = got_step
-
-    def save_checkpoint():
-        if ckpt is None:
-            return
-        host = {"step": step, "tokens_seen": tokens_seen,
-                "curriculum": curriculum.state_dict(),
-                "tracker": tracker.state_dict()}
-        ckpt.save(step, state, host)
-
-    total_steps = opt_cfg.total_steps or 10**9
-    total_tokens = opt_cfg.total_tokens or 10**18
-    if max_steps is not None:
-        total_steps = min(total_steps, step + max_steps)
-
-    seen_shapes = set()
-    t_start = time.time()
-    while step < total_steps and tokens_seen < total_tokens:
-        if drain is not None and drain.should_drain:
-            save_checkpoint()
-            result.drained = True
-            break
-        if fail_at_step is not None and step == fail_at_step:
-            raise RuntimeError(f"injected failure at step {step}")
-
-        watchdog.start()
-        batch = pipeline.batch_at(step)
-        if tc.slw.enabled:
-            batch, tokens_step = curriculum.apply(batch)
-        elif tc.batch_warmup.enabled:
-            batch, tokens_step = bwarm.apply(batch, tokens_seen)
-        else:
-            tokens_step = int(np.prod(batch["tokens"].shape[:2])) \
-                if "tokens" in batch else int(
-                    np.prod(next(iter(batch.values())).shape[:2]))
-
-        lr = lr_at(opt_cfg, step, tokens_seen)
-        shape_key = tuple(sorted((k, v.shape) for k, v in batch.items()))
-        if shape_key not in seen_shapes:
-            seen_shapes.add(shape_key)
-            result.n_compiles += 1
-        state, metrics = step_fn(state, batch, np.float32(lr))
-        loss = float(metrics["loss"])
-        var_max = float(metrics["var_max"])
-
-        ratio = tracker.update(loss) if math.isfinite(loss) else float("inf")
-        result._ratios.append(ratio)
-        result.loss_history.append(loss)
-        result.lr_history.append(lr)
-        result.seqlen_history.append(
-            curriculum.seqlen_for_step() if tc.slw.enabled else tc.seq_len)
-        result.var_max_history.append(var_max)
-        result.var_l1_history.append(float(metrics["var_l1"]))
-        result.grad_norm_history.append(float(metrics["grad_norm"]))
-        if callback is not None:
-            callback(step, {k: float(v) for k, v in metrics.items()})
-
-        if tc.slw.enabled:
-            if tc.slw.pacing == "variance_gated" and math.isfinite(var_max):
-                curriculum.observe(var_max)
-            curriculum.step_complete(tokens_step)
-        tokens_seen += tokens_step
-        step += 1
-        watchdog.stop()
-
-        if not math.isfinite(loss):
-            result.diverged = True
-            if stop_on_nan:
-                break
-
-        if tc.eval_interval and step % tc.eval_interval == 0:
-            ev = pipeline.eval_batch(step // tc.eval_interval, eval_batch)
-            ppl = float(np.exp(min(float(eval_fn(state["params"], ev)), 30.0)))
-            result.val_ppl_history.append((step, ppl))
-            if not quiet:
-                print(f"step {step} tokens {tokens_seen} loss {loss:.4f} "
-                      f"val_ppl {ppl:.2f} seqlen "
-                      f"{result.seqlen_history[-1]} lr {lr:.2e}", flush=True)
-
-        if ckpt is not None and tc.checkpoint_interval and \
-                step % tc.checkpoint_interval == 0:
-            save_checkpoint()
-
-    if ckpt is not None and not result.drained:
-        save_checkpoint()
-    result.steps = step
-    result.tokens = tokens_seen
-    result.wall_time_s = time.time() - t_start
-    result.tracker_summary = tracker.summary()
-    result.watchdog_summary = watchdog.summary()
-    return result
+    trainer = Trainer(tc, dp_size=dp_size, eval_batch=eval_batch,
+                      stop_on_nan=stop_on_nan, drain=drain, callback=callback,
+                      fail_at_step=fail_at_step, quiet=quiet)
+    if resume:
+        trainer.resume()
+    return trainer.run(max_steps=max_steps)
 
 
 # ---------------------------------------------------------------------------
@@ -228,12 +397,25 @@ def build_config(args) -> TrainConfig:
                            start_batch=max(args.batch // 8, 1),
                            warmup_tokens=(args.tokens or args.steps
                                           * args.batch * args.seq) // 20)
-    return TrainConfig(model=cfg, optimizer=opt, slw=slw, batch_warmup=bw,
-                       seq_len=args.seq, global_batch=args.batch,
-                       seed=args.seed, remat=args.remat,
-                       eval_interval=args.eval_interval,
-                       checkpoint_interval=args.ckpt_interval,
-                       checkpoint_dir=args.ckpt_dir)
+    tc = TrainConfig(model=cfg, optimizer=opt, slw=slw, batch_warmup=bw,
+                     seq_len=args.seq, global_batch=args.batch,
+                     seed=args.seed, remat=args.remat,
+                     eval_interval=args.eval_interval,
+                     checkpoint_interval=args.ckpt_interval,
+                     checkpoint_dir=args.ckpt_dir)
+    # adaptive regulators opt in via the explicit stack: the auto-derived
+    # schedules first, the telemetry-driven ones after (order matters — the
+    # LR throttle multiplies the scheduled LR).
+    extra = []
+    if args.grad_noise_batch:
+        extra.append(RegulatorSpec(kind="grad_noise_batch"))
+    if args.var_lr_throttle:
+        extra.append(RegulatorSpec(kind="var_lr_throttle"))
+    if extra:
+        from repro.core.regulators import auto_specs
+        tc = dataclasses.replace(tc,
+                                 regulators=auto_specs(tc) + tuple(extra))
+    return tc
 
 
 def main(argv=None) -> int:
@@ -262,7 +444,15 @@ def main(argv=None) -> int:
     p.add_argument("--max-buckets", type=int, default=16)
     p.add_argument("--slw-mode", default="truncate",
                    choices=["truncate", "repack"])
-    p.add_argument("--batch-warmup", action="store_true")
+    p.add_argument("--batch-warmup", action="store_true",
+                   help="composes with --slw (the paper's joint recipe)")
+    p.add_argument("--grad-noise-batch", action="store_true",
+                   help="adaptive batch sizing from grad-norm noise")
+    p.add_argument("--var-lr-throttle", action="store_true",
+                   help="LR backoff while Adam variance-max spikes")
+    p.add_argument("--dp-size", type=int, default=0,
+                   help="data-parallel size for batch quantization "
+                        "(0 = jax.device_count())")
     p.add_argument("--remat", default="none",
                    choices=["none", "full", "dots"])
     p.add_argument("--seed", type=int, default=1234)
@@ -274,7 +464,8 @@ def main(argv=None) -> int:
 
     tc = build_config(args)
     drain = DrainSignal()
-    res = train(tc, resume=args.resume, drain=drain, quiet=False)
+    dp = args.dp_size or jax.device_count()
+    res = train(tc, resume=args.resume, drain=drain, quiet=False, dp_size=dp)
     print(f"\ndone: steps={res.steps} tokens={res.tokens} "
           f"diverged={res.diverged} compiles={res.n_compiles}")
     print("stability:", res.tracker_summary)

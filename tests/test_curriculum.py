@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import SLWConfig
-from repro.core import SLWCurriculum
+from repro.core import SLWCurriculum, apply_seqlen
 from repro.core.batch_warmup import BatchWarmup
 from repro.configs.base import BatchWarmupConfig
 
@@ -82,6 +82,19 @@ def test_variance_gate_blocks_advance():
         cur2.step_complete(32)
     assert cur2.state.gate_level > held
     assert lo <= cur2.seqlen_for_step()
+
+
+def test_apply_seqlen_standalone_matches_curriculum():
+    """The standalone transform (what the trainer executes per StepPlan) is
+    the same function the curriculum object delegates to."""
+    cfg = SLWConfig(start_seq_len=8, duration_steps=100, mode="repack")
+    cur = SLWCurriculum(cfg, 256)
+    via_cur, t1 = cur.apply(_batch(), seqlen=64)
+    direct, t2 = apply_seqlen(_batch(), 64, mode="repack")
+    assert t1 == t2
+    np.testing.assert_array_equal(via_cur["tokens"], direct["tokens"])
+    with pytest.raises(ValueError, match="unknown SLW mode"):
+        apply_seqlen(_batch(), 64, mode="bogus")
 
 
 def test_batch_warmup_multiple_of_dp():

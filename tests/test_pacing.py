@@ -20,7 +20,9 @@ except ImportError:
     HAVE_HYPOTHESIS = False
 
 FULLS = [256, 1024, 2048, 4096, 32768]
-STARTS = [4, 8, 16, 64]
+# 12 and 100 are deliberately not multiples of the rounding values: the
+# ladder must keep the rounded-down arithmetic anchor below them
+STARTS = [4, 8, 12, 16, 64, 100]
 PACINGS = ["linear", "root", "two_stage"]
 ROUNDS = [8, 128]
 
@@ -52,7 +54,11 @@ def _check_ladder_invariants(cfg, full):
     ladder = pacing.bucket_ladder(cfg, full)
     assert len(ladder) <= cfg.max_buckets + 8  # geometric prefix allowance
     assert ladder == tuple(sorted(set(ladder)))
-    assert ladder[0] >= min(cfg.start_seq_len, full)
+    # round-*down* semantics: the smallest bucket never exceeds the
+    # configured start, and sits no further below it than one multiple
+    s0 = min(cfg.start_seq_len, full)
+    floor = s0 if s0 < cfg.round_multiple else s0 - s0 % cfg.round_multiple
+    assert floor <= ladder[0] <= s0
     assert ladder[-1] == full
 
 
@@ -151,6 +157,18 @@ def test_paper_linear_formula_exact():
     assert raw == pytest.approx(8 + (1024 - 8) * 0.5)
     s = pacing.seqlen_at(cfg, 50, 1024)
     assert s <= raw < s + 8 + 1  # round-down semantics
+
+
+def test_non_multiple_start_keeps_rounded_anchor():
+    """start_seq_len=12 with round_multiple=8: the ladder keeps the
+    rounded-down anchor (8), so the earliest warmup steps never run
+    *longer* than configured (the old filter deleted it, making the
+    smallest bucket 16)."""
+    cfg = SLWConfig(start_seq_len=12, duration_steps=100, round_multiple=8,
+                    max_buckets=16)
+    ladder = pacing.bucket_ladder(cfg, 256)
+    assert ladder[0] == 8
+    assert pacing.seqlen_at(cfg, 0, 256) <= 12
 
 
 def test_two_stage_is_shortformer():

@@ -1,4 +1,6 @@
-"""End-to-end training loop: learning, SLW mechanics, fault tolerance."""
+"""End-to-end training loop: learning, SLW mechanics, the composed
+regulator recipe, fault tolerance."""
+import dataclasses
 import math
 import os
 
@@ -8,9 +10,12 @@ import pytest
 from repro.configs import get_arch, reduced
 from repro.configs.base import (BatchWarmupConfig, OptimizerConfig, SLWConfig,
                                 TrainConfig)
+from repro.core import pacing
+from repro.core.batch_warmup import BatchWarmup
 from repro.distributed.fault_tolerance import (DrainSignal, StepWatchdog,
                                                TrainSupervisor)
-from repro.launch.train import train
+from repro.launch.train import Trainer, train
+from repro.optim import lr_at
 
 
 def _tc(steps=40, slw=True, lr=2e-3, seq=128, batch=8, ckpt_dir="",
@@ -89,6 +94,87 @@ def test_supervisor_recovers_from_injected_failure(tmp_path):
     assert sup.restarts == 1
 
 
+def _composed_tc(steps, ckpt_dir="", seq=128, batch=8):
+    """SLW + batch warmup + token-wise LR warmup, all at once — the paper's
+    joint recipe, expressible since the regulator control plane."""
+    tc = _tc(steps=steps, seq=seq, batch=batch, ckpt_dir=ckpt_dir)
+    # schedule constants must not depend on `steps`, so the 8-step and
+    # 16-step configs describe the *same* trajectory
+    return dataclasses.replace(
+        tc,
+        slw=dataclasses.replace(tc.slw, duration_steps=12),
+        batch_warmup=BatchWarmupConfig(enabled=True, start_batch=2,
+                                       warmup_tokens=1000),
+        checkpoint_interval=8)
+
+
+def _predict_composed(tc, n_steps, dp_size=1):
+    """Per-step (seqlen, batch, lr) from each schedule computed standalone
+    (the primitive modules, not the stack) — the oracle the composed run
+    must match."""
+    ladder = pacing.bucket_ladder(tc.slw, tc.seq_len)
+    bw = BatchWarmup(tc.batch_warmup, tc.global_batch, dp_size=dp_size)
+    tokens, rows = 0, []
+    for i in range(n_steps):
+        s = pacing.seqlen_at(tc.slw, i, tc.seq_len,
+                             tc.optimizer.warmup_steps, ladder)
+        b = bw.batch_for_tokens(tokens)
+        rows.append((s, b, lr_at(tc.optimizer, i, tokens)))
+        tokens += s * b
+    return rows
+
+
+def test_composed_recipe_matches_individual_regulators(tmp_path):
+    """Acceptance: one TrainConfig runs SLW + batch warmup + token-wise LR
+    simultaneously; the per-step (seqlen, batch, lr) trajectory equals the
+    individual schedules' standalone predictions, across a mid-warmup
+    checkpoint/restore, with dp-size batch quantization engaged."""
+    d = str(tmp_path / "ck")
+    steps, dp = 16, 2
+    pred = _predict_composed(_composed_tc(steps), steps, dp_size=dp)
+
+    r1 = train(_composed_tc(8, ckpt_dir=d), quiet=True, dp_size=dp)
+    assert r1.steps == 8  # mid-warmup: both schedules still ramping
+    assert r1.seqlen_history[-1] < 128 and r1.batch_history[-1] < 8
+    r2 = train(_composed_tc(steps, ckpt_dir=d), resume=True, quiet=True,
+               dp_size=dp)
+    assert r2.restored_from_step == 8
+
+    seqs = r1.seqlen_history + r2.seqlen_history
+    batches = r1.batch_history + r2.batch_history
+    lrs = r1.lr_history + r2.lr_history
+    assert seqs == [p[0] for p in pred]
+    assert batches == [p[1] for p in pred]
+    assert all(b % dp == 0 for b in batches)  # paper's §5.1 dp constraint
+    for got, (_, _, want) in zip(lrs, pred):
+        assert got == pytest.approx(want, rel=1e-6)
+    assert r2.tokens == sum(s * b for s, b, _ in pred)
+
+
+def test_variance_gated_resume_roundtrip(tmp_path):
+    """gate_level/var_trailing round-trip through ControllerState: a restart
+    mid-warmup resumes the variance-gated curriculum at the same bucket."""
+    d = str(tmp_path / "ck")
+    tc = _tc(steps=10, pacing="variance_gated", ckpt_dir=d)
+    tr1 = Trainer(tc, quiet=True)
+    res1 = tr1.run()
+    assert res1.steps == 10
+    saved = dataclasses.asdict(tr1.stack["seqlen"].curriculum.state)
+    assert saved["gate_level"] > 0  # the gate actually advanced
+    assert saved["var_trailing"] > 0.0
+
+    tc2 = _tc(steps=20, pacing="variance_gated", ckpt_dir=d)
+    tr2 = Trainer(tc2, quiet=True)
+    assert tr2.resume() == 10
+    restored = dataclasses.asdict(tr2.stack["seqlen"].curriculum.state)
+    assert restored == saved
+    assert tr2.stack["seqlen"].curriculum.seqlen_for_step() == \
+        tr1.stack["seqlen"].curriculum.seqlen_for_step()  # same bucket
+    res2 = tr2.run()
+    assert res2.steps == 20
+    assert res2.seqlen_history[0] >= res1.seqlen_history[-1]
+
+
 def test_drain_checkpoints_and_exits(tmp_path):
     d = str(tmp_path / "ck")
     drain = DrainSignal(install=False)
@@ -105,6 +191,24 @@ def test_drain_checkpoints_and_exits(tmp_path):
     assert res.steps == 8
     from repro.checkpoint import latest_step
     assert latest_step(d) == 8  # checkpointed on the way out
+
+
+def test_custom_hooks_extend_defaults():
+    """Passing hooks= must not silently drop the drain/callback/eval
+    concerns — extras append after the default hook set."""
+    from repro.launch.train import (CheckpointHook, DrainHook, EvalHook,
+                                    TelemetryHook, Trainer, TrainerHook,
+                                    WatchdogHook)
+
+    class Extra(TrainerHook):
+        pass
+
+    extra = Extra()
+    tr = Trainer(_tc(steps=1), hooks=[extra])
+    kinds = [type(h) for h in tr.hooks]
+    assert kinds == [DrainHook, WatchdogHook, TelemetryHook, EvalHook,
+                     CheckpointHook, Extra]
+    assert tr.hooks[-1] is extra
 
 
 def test_watchdog_flags_stragglers():
