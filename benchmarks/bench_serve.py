@@ -1,0 +1,111 @@
+"""Serving benchmark: continuous batching vs the static-batch baseline.
+
+Workload: one prompt bucket, *ragged generation lengths* (the serving-side
+face of the paper's sequence-length heterogeneity).  The static path
+processes requests in arrival-order batches and every batch decodes until
+its longest member finishes — short generations ride along as dead rows.
+The engine evicts finished slots and backfills from the queue, so useful
+decode tok/s is higher whenever generation lengths diverge.
+
+Rows (``--json`` via benchmarks.run writes BENCH_serve.json):
+  serve/engine_prefill      us per prompt token + prefill tok/s
+  serve/engine_decode       us per useful token + tok/s + p50/p95 latency
+  serve/static_decode       us per useful token + tok/s (legacy path)
+  serve/continuous_vs_static  decode-throughput speedup (the gate: > 1x)
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import BENCH_MODEL, Row
+from repro.models import model_zoo
+from repro.serve import InferenceEngine, Request, SchedulerConfig
+
+PROMPT_LEN = 48
+SLOTS = 4
+# high-variance budgets: the continuous-batching case
+GEN_CYCLE = (4, 28, 8, 24, 4, 16, 6, 28)
+
+
+def _requests(vocab: int, n: int, seed: int = 0) -> List[Request]:
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    tokens=tuple(int(t) for t in
+                                 rng.integers(0, vocab, size=PROMPT_LEN)),
+                    max_tokens=GEN_CYCLE[i % len(GEN_CYCLE)])
+            for i in range(n)]
+
+
+def _static_decode(model, params, reqs, cache_len: int):
+    """Legacy static batching: arrival-order batches of SLOTS, each decoded
+    until its longest generation finishes.  Returns (decode_s, useful)."""
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, cache_len=cache_len))
+    decode = jax.jit(lambda p, c, t: model.decode(p, c, t))
+    decode_s, useful = 0.0, 0
+    for i in range(0, len(reqs), SLOTS):
+        batch = reqs[i:i + SLOTS]
+        toks = jnp.asarray([r.tokens for r in batch], jnp.int32)
+        logits, cache = prefill(params, {"tokens": toks})
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        steps = max(r.max_tokens for r in batch) - 1
+        t0 = time.time()
+        for _ in range(steps):
+            logits, cache = decode(params, cache, tok)
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        jax.block_until_ready(tok)
+        decode_s += time.time() - t0
+        useful += sum(min(steps, r.max_tokens - 1) for r in batch)
+    return decode_s, useful
+
+
+def run(quick: bool = False) -> List[Row]:
+    n_requests = 8 if quick else 16
+    cfg = BENCH_MODEL
+    model = model_zoo.build_model(cfg, dtype=jnp.float32, remat="none")
+    params = model_zoo.init_params(jax.random.PRNGKey(0), cfg)
+    cache_len = PROMPT_LEN + max(GEN_CYCLE)
+    sched = SchedulerConfig(n_slots=SLOTS, cache_len=cache_len,
+                            min_prompt_bucket=16, round_multiple=16,
+                            max_buckets=6)
+    reqs = _requests(cfg.vocab_size, n_requests)
+
+    engine = InferenceEngine(model, params, sched)
+    engine.run(_requests(cfg.vocab_size, 2, seed=1))  # compile warm-up
+    engine.reset_stats()
+    results = engine.run(reqs)
+    s = engine.stats
+    assert all(r.n_generated == q.max_tokens for r, q in zip(results, reqs))
+
+    _static_decode(model, params, reqs[:SLOTS], cache_len)  # warm-up
+    st_s, st_useful = _static_decode(model, params, reqs, cache_len)
+    st_tok_s = st_useful / max(st_s, 1e-9)
+
+    speedup = s.decode_tok_s / max(st_tok_s, 1e-9)
+    rows: List[Row] = [
+        ("serve/engine_prefill", 1e6 * s.prefill_s / max(s.prefill_tokens, 1),
+         f"tok_s={s.prefill_tok_s:.0f} prompts={n_requests} "
+         f"buckets={len(engine.scheduler.ladder)}"),
+        ("serve/engine_decode",
+         1e6 * s.decode_s / max(s.generated_tokens - s.admitted, 1),
+         f"tok_s={s.decode_tok_s:.0f} steps={s.decode_steps} "
+         f"p50_ms={s.latency_percentile(50)*1e3:.1f} "
+         f"p95_ms={s.latency_percentile(95)*1e3:.1f}"),
+        ("serve/static_decode", 1e6 * st_s / max(st_useful, 1),
+         f"tok_s={st_tok_s:.0f} batches={-(-n_requests // SLOTS)} "
+         f"useful={st_useful}"),
+        ("serve/continuous_vs_static", 0.0,
+         f"decode_speedup={speedup:.2f}x slots={SLOTS} "
+         f"requests={n_requests}"),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

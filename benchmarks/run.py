@@ -26,6 +26,7 @@ SUITES = [
     ("table4", "benchmarks.bench_table4_gpt3recipe"),
     ("a2", "benchmarks.bench_a2_lr_decay"),
     ("kernels", "benchmarks.bench_kernels"),
+    ("serve", "benchmarks.bench_serve"),
     ("roofline", "benchmarks.bench_roofline"),
 ]
 

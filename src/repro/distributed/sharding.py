@@ -180,15 +180,35 @@ class ShardingRules:
         return NamedSharding(self.mesh, self.act_spec(axes, shape))
 
 
+def is_axes_leaf(x: Any) -> bool:
+    """A logical-axes tuple leaf in an axes tree (e.g. ("batch", "seq"))."""
+    return isinstance(x, tuple) and all(
+        isinstance(a, (str, type(None))) for a in x)
+
+
+def _tree_shardings(method, axes_tree: Any, shape_tree: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda axes, sds: method(axes, sds.shape), axes_tree, shape_tree,
+        is_leaf=is_axes_leaf)
+
+
 def tree_param_shardings(rules: ShardingRules, axes_tree: Any,
                          shape_tree: Any) -> Any:
     """NamedSharding tree from a logical-axes tree + ShapeDtypeStruct tree."""
-    def one(axes, sds):
-        return rules.param_sharding(axes, sds.shape)
-    return jax.tree_util.tree_map(
-        one, axes_tree, shape_tree,
-        is_leaf=lambda x: isinstance(x, tuple) and all(
-            isinstance(a, (str, type(None))) for a in x))
+    return _tree_shardings(rules.param_sharding, axes_tree, shape_tree)
+
+
+def tree_act_shardings(rules: ShardingRules, axes_tree: Any,
+                       shape_tree: Any) -> Any:
+    """NamedSharding tree under the *activation* rules.
+
+    Used for stateful activation trees such as the serve decode cache
+    (``model_zoo.decode_cache_axes``): the slot axis is the cache's "batch"
+    logical axis, so under ``serve_tp`` rules slots spread over the data
+    mesh axis while heads/states stay TP-sharded — one spec tree drives
+    jit donation placement for the whole engine state.
+    """
+    return _tree_shardings(rules.act_sharding, axes_tree, shape_tree)
 
 
 # ---------------------------------------------------------------------------

@@ -1,7 +1,14 @@
-"""Batched serving driver: prefill + greedy decode with a KV cache.
+"""Serving CLI: continuous-batching engine (default) or the legacy
+static-batch greedy path (``--legacy``).
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
-      --batch 4 --prompt-len 64 --gen 32
+      --requests 8 --batch 4 --prompt-len 64 --gen 32
+
+``--batch`` keeps its historical meaning on both paths: the decode batch
+width (engine slot count / legacy static batch).  The engine path admits
+``--requests`` ragged requests through the prompt bucket ladder and
+backfills slots as generations finish; the legacy path is kept verbatim as
+the parity oracle (tests) and the static-batch baseline (bench_serve).
 """
 from __future__ import annotations
 
@@ -16,11 +23,14 @@ import jax.numpy as jnp
 from repro.configs import get_arch, reduced as reduce_cfg
 from repro.data import SyntheticCorpus
 from repro.models import model_zoo
+from repro.serve import (InferenceEngine, Request, SamplingParams,
+                         SchedulerConfig)
 
 
 def serve(arch: str, use_reduced: bool, batch: int, prompt_len: int,
           gen_tokens: int, cache_len: int = 0, seed: int = 0,
           quiet: bool = False):
+    """Legacy static-batch greedy decode (the engine's parity oracle)."""
     spec = get_arch(arch)
     cfg = reduce_cfg(spec.model) if use_reduced else spec.model
     model = model_zoo.build_model(cfg, dtype=jnp.float32, remat="none")
@@ -63,17 +73,99 @@ def serve(arch: str, use_reduced: bool, batch: int, prompt_len: int,
             "generated": gen}
 
 
+def make_requests(cfg, n_requests: int, prompt_len: int, gen_tokens: int,
+                  seed: int = 0, ragged: bool = True,
+                  sampling: SamplingParams = SamplingParams()):
+    """Synthetic workload: ``n_requests`` prompts; when ``ragged``, prompt
+    and generation lengths vary per request (the continuous-batching case —
+    the paper's length heterogeneity at serving time)."""
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seq_len=prompt_len,
+                             seed=seed)
+    prompts = np.asarray(corpus.batch(0, n_requests)["tokens"])
+    reqs = []
+    for i in range(n_requests):
+        plen = prompt_len
+        mt = gen_tokens
+        if ragged:
+            plen = max(4, prompt_len - (i % 4) * max(prompt_len // 6, 1))
+            mt = max(1, gen_tokens - (i % 3) * max(gen_tokens // 4, 1))
+        reqs.append(Request(uid=i, tokens=tuple(int(t) for t in
+                                                prompts[i, :plen]),
+                            max_tokens=mt, sampling=sampling))
+    return reqs
+
+
+def serve_engine(arch: str, use_reduced: bool, n_slots: int, prompt_len: int,
+                 gen_tokens: int, n_requests: int = 0, cache_len: int = 0,
+                 seed: int = 0, ragged: bool = True,
+                 sampling: SamplingParams = SamplingParams(),
+                 sched: SchedulerConfig = None, quiet: bool = False):
+    """Continuous-batching serve: the thin driver over InferenceEngine."""
+    spec = get_arch(arch)
+    cfg = reduce_cfg(spec.model) if use_reduced else spec.model
+    n_requests = n_requests or n_slots
+    cache_len = cache_len or prompt_len + gen_tokens
+    sched = sched or SchedulerConfig(
+        n_slots=n_slots, cache_len=cache_len,
+        min_prompt_bucket=min(16, max(prompt_len // 4, 1)),
+        round_multiple=max(prompt_len // 4, 8))
+    engine = InferenceEngine.from_arch(arch, use_reduced=use_reduced,
+                                       seed=seed, cfg=sched)
+    reqs = make_requests(cfg, n_requests, prompt_len, gen_tokens, seed=seed,
+                         ragged=ragged, sampling=sampling)
+    t0 = time.time()
+    results = engine.run(reqs)
+    wall = time.time() - t0
+    s = engine.stats
+    if not quiet:
+        print(f"arch={cfg.name} slots={n_slots} requests={n_requests} "
+              f"buckets={engine.scheduler.ladder}")
+        print(f"prefill: {s.prefill_s*1e3:.1f} ms ({s.prefill_tok_s:.0f} "
+              f"tok/s over {s.prefill_tokens} prompt tokens)")
+        print(f"decode:  {s.decode_s*1e3:.1f} ms, {s.decode_tok_s:.0f} tok/s "
+              f"({s.generated_tokens} tokens, {s.decode_steps} fused steps)")
+        print(f"latency: p50={s.latency_percentile(50)*1e3:.1f} ms "
+              f"p95={s.latency_percentile(95)*1e3:.1f} ms per token")
+        print("sample:", results[0].tokens[:16])
+    return {"wall_s": wall, "prefill_s": s.prefill_s, "decode_s": s.decode_s,
+            "prefill_tok_s": s.prefill_tok_s, "decode_tok_s": s.decode_tok_s,
+            "p50_s": s.latency_percentile(50),
+            "p95_s": s.latency_percentile(95),
+            "results": results, "stats": s}
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--arch", default="smollm-360m")
     p.add_argument("--reduced", action="store_true")
-    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--batch", type=int, default=4,
+                   help="decode width: engine slot count / legacy batch")
     p.add_argument("--prompt-len", type=int, default=64)
     p.add_argument("--gen", type=int, default=32)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--cache-len", type=int, default=0,
+                   help="per-slot cache capacity (0 = prompt+gen)")
+    p.add_argument("--legacy", action="store_true",
+                   help="static-batch greedy path instead of the engine")
+    p.add_argument("--requests", type=int, default=0,
+                   help="engine: number of requests (0 = --batch)")
+    p.add_argument("--uniform", action="store_true",
+                   help="engine: identical prompt/gen lengths per request")
+    p.add_argument("--temperature", type=float, default=0.0)
+    p.add_argument("--top-k", type=int, default=0)
+    p.add_argument("--top-p", type=float, default=1.0)
     args = p.parse_args(argv)
-    serve(args.arch, args.reduced, args.batch, args.prompt_len, args.gen,
-          seed=args.seed)
+
+    if args.legacy:
+        serve(args.arch, args.reduced, args.batch, args.prompt_len, args.gen,
+              cache_len=args.cache_len, seed=args.seed)
+    else:
+        sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                           top_p=args.top_p, seed=args.seed)
+        serve_engine(args.arch, args.reduced, args.batch, args.prompt_len,
+                     args.gen, n_requests=args.requests,
+                     cache_len=args.cache_len, seed=args.seed,
+                     ragged=not args.uniform, sampling=sp)
     return 0
 
 

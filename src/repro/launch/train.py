@@ -92,7 +92,12 @@ class TrainerHook:
         pass
 
     def on_run_end(self, tr: "Trainer") -> None:
-        pass
+        """Normal-completion epilogue (summaries, final checkpoint)."""
+
+    def close(self) -> None:
+        """Resource cleanup only — also runs when the loop exits via an
+        exception (on_run_end does not: saving checkpoints or summaries
+        during unwind would record a state no real preemption could)."""
 
 
 class DrainHook(TrainerHook):
@@ -139,6 +144,45 @@ class TelemetryHook(TrainerHook):
 
     def on_run_end(self, tr: "Trainer") -> None:
         tr.result.tracker_summary = tr.tracker.summary()
+
+
+class MetricsJsonlHook(TrainerHook):
+    """Appends one JSON row per step (StepPlan + StepTelemetry) to a file.
+
+    The ROADMAP's "surface Trainer hooks in the CLI" follow-on: a
+    deployment-grade telemetry tap (``--metrics-jsonl PATH``) that records
+    exactly what the regulator stack planned and observed, without touching
+    the loop.  Rows are flushed per step so a crashed/drained run keeps its
+    telemetry up to the last completed step.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self._fh = None
+
+    def on_run_start(self, tr: "Trainer") -> None:
+        self._fh = open(self.path, "a", buffering=1)
+
+    def on_step_end(self, tr, tele, plan, metrics) -> None:
+        import json
+        row = {
+            "step": tele.step, "tokens_seen": tele.tokens_seen,
+            "loss": tele.loss, "loss_ratio": tele.loss_ratio,
+            "grad_norm": tele.grad_norm, "var_max": tele.var_max,
+            "var_l1": tele.var_l1,
+            "plan": {"seq_len": plan.seq_len, "batch_size": plan.batch_size,
+                     "lr": plan.lr,
+                     "grad_clip_scale": plan.grad_clip_scale},
+        }
+        self._fh.write(json.dumps(row) + "\n")
+
+    def on_run_end(self, tr: "Trainer") -> None:
+        self.close()
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
 
 
 class EvalHook(TrainerHook):
@@ -324,25 +368,34 @@ class Trainer:
         t_start = time.time()
         for h in self.hooks:
             h.on_run_start(self)
-        while self.step < total_steps and self.tokens_seen < total_tokens:
-            for h in self.hooks:
-                h.on_step_start(self)
-            if self._drain_requested:
-                self.save_checkpoint()
-                self.result.drained = True
-                break
-            if self.fail_at_step is not None and self.step == self.fail_at_step:
-                raise RuntimeError(f"injected failure at step {self.step}")
+        try:
+            while self.step < total_steps and self.tokens_seen < total_tokens:
+                for h in self.hooks:
+                    h.on_step_start(self)
+                if self._drain_requested:
+                    self.save_checkpoint()
+                    self.result.drained = True
+                    break
+                if (self.fail_at_step is not None
+                        and self.step == self.fail_at_step):
+                    raise RuntimeError(f"injected failure at step {self.step}")
 
-            tele, plan, metrics = self.run_step()
+                tele, plan, metrics = self.run_step()
 
-            if not math.isfinite(tele.loss):
-                self.result.diverged = True
-                self.stopping = self.stop_on_nan
+                if not math.isfinite(tele.loss):
+                    self.result.diverged = True
+                    self.stopping = self.stop_on_nan
+                for h in self.hooks:
+                    h.on_step_end(self, tele, plan, metrics)
+                if self.stopping:
+                    break
+        except BaseException:
+            # crash path: resource cleanup only — no checkpoints/summaries
+            # during unwind (a real preemption couldn't write them either,
+            # and self.state may hold donated buffers)
             for h in self.hooks:
-                h.on_step_end(self, tele, plan, metrics)
-            if self.stopping:
-                break
+                h.close()
+            raise
         for h in self.hooks:
             h.on_run_end(self)
         self.result.steps = self.step
@@ -360,7 +413,8 @@ def train(tc: TrainConfig,
           callback: Optional[Callable[[int, Dict[str, float]], None]] = None,
           fail_at_step: Optional[int] = None,
           quiet: bool = True,
-          dp_size: int = 1) -> TrainResult:
+          dp_size: int = 1,
+          hooks: Optional[List[TrainerHook]] = None) -> TrainResult:
     """Run the training loop on the local device(s). Returns full telemetry.
 
     Thin wrapper over :class:`Trainer` so existing entry points keep
@@ -368,7 +422,7 @@ def train(tc: TrainConfig,
     """
     trainer = Trainer(tc, dp_size=dp_size, eval_batch=eval_batch,
                       stop_on_nan=stop_on_nan, drain=drain, callback=callback,
-                      fail_at_step=fail_at_step, quiet=quiet)
+                      fail_at_step=fail_at_step, quiet=quiet, hooks=hooks)
     if resume:
         trainer.resume()
     return trainer.run(max_steps=max_steps)
@@ -460,12 +514,18 @@ def main(argv=None) -> int:
     p.add_argument("--ckpt-dir", default="")
     p.add_argument("--ckpt-interval", type=int, default=100)
     p.add_argument("--resume", action="store_true")
+    p.add_argument("--metrics-jsonl", default="",
+                   help="append per-step StepPlan/StepTelemetry rows to "
+                        "this JSONL file (telemetry TrainerHook)")
     args = p.parse_args(argv)
 
     tc = build_config(args)
     drain = DrainSignal()
     dp = args.dp_size or jax.device_count()
-    res = train(tc, resume=args.resume, drain=drain, quiet=False, dp_size=dp)
+    hooks = ([MetricsJsonlHook(args.metrics_jsonl)]
+             if args.metrics_jsonl else None)
+    res = train(tc, resume=args.resume, drain=drain, quiet=False, dp_size=dp,
+                hooks=hooks)
     print(f"\ndone: steps={res.steps} tokens={res.tokens} "
           f"diverged={res.diverged} compiles={res.n_compiles}")
     print("stability:", res.tracker_summary)

@@ -157,15 +157,33 @@ def decode_attention(params: Dict[str, jax.Array], x: jax.Array,
                      pos: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One-token decode against a (B, S_max, KV, D) cache at position `pos`.
 
-    Returns (out, new_cache_k, new_cache_v).
+    ``pos`` is a scalar (whole batch at one position — the legacy static
+    path) or a per-row (B,) vector (continuous batching: every slot decodes
+    at its own depth).  Returns (out, new_cache_k, new_cache_v).
     """
     b, s_q, h, = x.shape[0], x.shape[1], cfg.n_heads
-    positions = pos + jnp.arange(s_q)[None, :]  # (1, s_q) broadcast over batch
+    pos = jnp.asarray(pos)
+    per_slot = pos.ndim == 1
+    if per_slot:
+        positions = pos[:, None] + jnp.arange(s_q)[None, :]  # (B, s_q)
+    else:
+        positions = pos + jnp.arange(s_q)[None, :]  # (1, s_q) broadcast
     q, k, v = _project_qkv(params, x, cfg, positions)
-    cache_k = jax.lax.dynamic_update_slice_in_dim(
-        cache_k, k.astype(cache_k.dtype), pos, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(
-        cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    s_max = cache_k.shape[1]
+    if per_slot:
+        # per-row scatter: row b writes its s_q tokens at pos[b]..pos[b]+s_q-1
+        # (vmapped dynamic_update_slice lowers to a scatter — no cache-sized
+        # temporaries; XLA clamps out-of-range starts, and rows past s_max
+        # are empty/retired slots whose contents are never surfaced)
+        def _row_write(c, upd, p):
+            return jax.lax.dynamic_update_slice_in_dim(c, upd, p, axis=0)
+        cache_k = jax.vmap(_row_write)(cache_k, k.astype(cache_k.dtype), pos)
+        cache_v = jax.vmap(_row_write)(cache_v, v.astype(cache_v.dtype), pos)
+    else:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, k.astype(cache_k.dtype), pos, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, v.astype(cache_v.dtype), pos, axis=1)
 
     kvh = cfg.n_kv_heads
     g = h // kvh
@@ -173,9 +191,13 @@ def decode_attention(params: Dict[str, jax.Array], x: jax.Array,
     scale = 1.0 / math.sqrt(d)
     qg = q.reshape(b, s_q, kvh, g, d) * scale
     s = jnp.einsum("bqkgd,bjkd->bkgqj", qg, cache_k).astype(jnp.float32)
-    s_max = cache_k.shape[1]
-    valid = jnp.arange(s_max)[None, :] <= (pos + jnp.arange(s_q))[:, None]
-    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    if per_slot:
+        valid = (jnp.arange(s_max)[None, None, :]
+                 <= positions[:, :, None])  # (B, s_q, S)
+        s = jnp.where(valid[:, None, None], s, NEG_INF)
+    else:
+        valid = jnp.arange(s_max)[None, :] <= (pos + jnp.arange(s_q))[:, None]
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     ctx = jnp.einsum("bkgqj,bjkd->bkgqd", p.astype(cache_v.dtype), cache_v)
     ctx = ctx.transpose(0, 3, 1, 2, 4).reshape(b, s_q, h, d)

@@ -153,6 +153,19 @@ def conv_decode_step(conv_state: jax.Array, x_t: jax.Array, w: jax.Array,
     return y, window[:, 1:, :]
 
 
+def conv_prefill_state(x_raw: jax.Array, kernel: int, dtype) -> jax.Array:
+    """Rolling conv window after a prefill of ``s`` tokens: the last K-1
+    raw inputs, zero-left-padded when s < K-1 (zeros are exactly
+    ``causal_conv1d``'s implicit history, so short-prompt prefill hands
+    ``conv_decode_step`` the same state a token-by-token decode would)."""
+    kk = kernel - 1
+    b, s, d = x_raw.shape
+    if s < kk:
+        pad = jnp.zeros((b, kk - s, d), x_raw.dtype)
+        x_raw = jnp.concatenate([pad, x_raw], axis=1)
+    return x_raw[:, -kk:, :].astype(dtype)
+
+
 # ---------------------------------------------------------------------------
 # the Mamba-2 block
 # ---------------------------------------------------------------------------

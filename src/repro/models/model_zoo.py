@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import is_axes_leaf
 from repro.models import layers as L
 from repro.models.moe import MoELM, moe_defs
 from repro.models.rwkv6 import RWKV6LM, rwkv6_defs
@@ -57,6 +58,47 @@ def active_param_count(cfg: ModelConfig) -> int:
     e, k = cfg.n_experts, cfg.top_k
     routed = 3 * cfg.n_layers * cfg.d_model * cfg.d_ff * e
     return total - routed + routed * k // e
+
+
+# ---------------------------------------------------------------------------
+# decode-state construction — the slot-addressable serving cache
+# (repro.serve.state wraps these behind the DecodeState protocol)
+# ---------------------------------------------------------------------------
+
+def decode_cache_axes(model) -> Any:
+    """Logical-axes tree for the slot cache: scalar bookkeeping leaves
+    (``pos``) are promoted to per-slot vectors, so every leaf carries the
+    "batch" (slot) axis."""
+    def one(ax):
+        return ax if "batch" in ax else ("batch",) + ax
+    return jax.tree_util.tree_map(one, model.cache_axes(),
+                                  is_leaf=is_axes_leaf)
+
+
+def decode_cache_specs(model, n_slots: int, cache_len: int) -> Any:
+    """ShapeDtypeStruct tree for an ``n_slots``-wide decode cache.
+
+    Uniform across backbones: transformer/MoE KV caches, Mamba-2/RWKV-6
+    recurrent states and the Zamba-2 hybrid cache all come out with the
+    batch dim sized to ``n_slots`` and the scalar ``pos`` leaf promoted to
+    a per-slot (n_slots,) vector (each slot decodes at its own depth).
+    """
+    shapes = model.cache_shapes(n_slots, cache_len)
+    axes = model.cache_axes()
+
+    def one(ax, sds):
+        if "batch" in ax:
+            return sds
+        return jax.ShapeDtypeStruct((n_slots,) + sds.shape, sds.dtype)
+
+    return jax.tree_util.tree_map(one, axes, shapes, is_leaf=is_axes_leaf)
+
+
+def init_decode_cache(model, n_slots: int, cache_len: int) -> Any:
+    """Zero-initialized slot cache (see ``decode_cache_specs``)."""
+    return jax.tree_util.tree_map(
+        lambda sds: jnp.zeros(sds.shape, sds.dtype),
+        decode_cache_specs(model, n_slots, cache_len))
 
 
 # ---------------------------------------------------------------------------

@@ -47,7 +47,11 @@ def dense_defs(cfg: ModelConfig) -> Dict[str, Any]:
 
 def embed_inputs(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
                  dtype, start_pos=0) -> Tuple[jax.Array, jax.Array]:
-    """Token/frontend embedding. Returns (x, positions)."""
+    """Token/frontend embedding. Returns (x, positions).
+
+    ``start_pos`` is a scalar (legacy whole-batch decode) or a per-row (B,)
+    vector (continuous batching), yielding positions (S,) or (B, S).
+    """
     if cfg.frontend == "audio_frames" and "frames" in batch:
         x = batch["frames"].astype(dtype)  # stubbed EnCodec frame embeddings
     else:
@@ -58,7 +62,9 @@ def embed_inputs(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
         if cfg.frontend == "vision_patches" and "patch_embeds" in batch:
             x = jnp.concatenate([batch["patch_embeds"].astype(dtype), x], axis=1)
     s = x.shape[1]
-    positions = start_pos + jnp.arange(s)
+    start = jnp.asarray(start_pos)
+    positions = (start[:, None] + jnp.arange(s) if start.ndim
+                 else start + jnp.arange(s))
     if cfg.pos_emb == "learned":
         x = x + jnp.take(params["pos_embed"], positions, axis=0).astype(dtype)
     return x, positions

@@ -146,12 +146,12 @@ class Zamba2LM:
             y = mamba2.rms_norm(y * jax.nn.silu(z), lp["norm_gate"]["scale"],
                                 cfg.norm_eps)
             out = h + y @ lp["wo"].astype(y.dtype)
-            kk = cfg.conv_kernel - 1
+            k = cfg.conv_kernel
             cache = {
                 "ssm_state": state,
-                "conv_x": x_in[:, -kk:, :].astype(self.dtype),
-                "conv_b": b_raw[:, -kk:, :].astype(self.dtype),
-                "conv_c": c_raw[:, -kk:, :].astype(self.dtype),
+                "conv_x": mamba2.conv_prefill_state(x_in, k, self.dtype),
+                "conv_b": mamba2.conv_prefill_state(b_raw, k, self.dtype),
+                "conv_c": mamba2.conv_prefill_state(c_raw, k, self.dtype),
             }
             return out, cache
 

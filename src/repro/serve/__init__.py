@@ -1,0 +1,19 @@
+"""Unified inference subsystem: continuous batching over one DecodeState
+protocol for every backbone (transformer / MoE / Mamba-2 / RWKV-6 / Zamba-2).
+
+    from repro.serve import InferenceEngine, Request, SamplingParams
+
+    engine = InferenceEngine.from_arch("gpt2-117m", use_reduced=True)
+    results = engine.run([Request(uid=0, tokens=(1, 2, 3), max_tokens=16)])
+"""
+from repro.serve.engine import EngineStats, InferenceEngine
+from repro.serve.sampling import sample_tokens
+from repro.serve.scheduler import Scheduler, SchedulerConfig, prefill_split
+from repro.serve.state import DecodeState, SlotDecodeState
+from repro.serve.types import GenerationResult, Request, SamplingParams
+
+__all__ = [
+    "DecodeState", "EngineStats", "GenerationResult", "InferenceEngine",
+    "Request", "SamplingParams", "Scheduler", "SchedulerConfig",
+    "SlotDecodeState", "prefill_split", "sample_tokens",
+]

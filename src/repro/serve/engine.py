@@ -1,0 +1,230 @@
+"""InferenceEngine: continuous batching over the DecodeState protocol.
+
+One engine serves every backbone family through the same three jitted
+executables:
+
+* per-bucket **prefill** (shape-keyed jit cache, bounded by the prompt
+  ladder) + an exact decode replay of the sub-bucket remainder,
+* slot **insert/evict** surgery on the donated state buffer,
+* one **fused decode step** for all slots at once (per-slot positions,
+  per-slot sampling parameters, per-slot stopping).
+
+The loop is host-driven: admit pending requests into free slots, step the
+fused decode, retire finished slots, backfill.  Greedy outputs are
+tokenwise identical to running each request alone through the legacy
+static-batch path (tests/test_serve_engine.py pins this for dense and
+recurrent backbones).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model_zoo
+from repro.serve import sampling
+from repro.serve.scheduler import Scheduler, SchedulerConfig, prefill_split
+from repro.serve.state import SlotDecodeState
+from repro.serve.types import GenerationResult, Request
+
+OnToken = Callable[[int, int], None]  # (request uid, token id)
+
+
+@dataclass
+class EngineStats:
+    """Host wall-clock accounting for one engine lifetime."""
+
+    prefill_s: float = 0.0
+    prefill_tokens: int = 0
+    decode_s: float = 0.0
+    decode_steps: int = 0
+    generated_tokens: int = 0
+    admitted: int = 0
+    step_times: List[float] = field(default_factory=list)
+
+    @property
+    def prefill_tok_s(self) -> float:
+        return self.prefill_tokens / max(self.prefill_s, 1e-9)
+
+    @property
+    def decode_tok_s(self) -> float:
+        """Useful fused-decode tokens per second of fused-decode wall time
+        (each request's first token is emitted by its admission prefill and
+        excluded here)."""
+        return ((self.generated_tokens - self.admitted)
+                / max(self.decode_s, 1e-9))
+
+    def latency_percentile(self, p: float) -> float:
+        """p-th percentile of per-step (== per-token) decode latency, s."""
+        if not self.step_times:
+            return 0.0
+        return float(np.percentile(np.asarray(self.step_times), p))
+
+
+class InferenceEngine:
+    """Continuous-batching generation over a fixed slot pool."""
+
+    def __init__(self, model, params, cfg: Optional[SchedulerConfig] = None,
+                 rules=None):
+        self.model = model
+        self.params = params
+        self.cfg = cfg or SchedulerConfig()
+        self.state = SlotDecodeState(model)
+        self.scheduler = Scheduler(self.cfg)
+        self.cache = self.state.init_slots(self.cfg.n_slots,
+                                           self.cfg.cache_len)
+        if rules is not None:
+            self.cache = jax.device_put(
+                self.cache, self.state.shardings(rules, self.cfg.n_slots,
+                                                 self.cfg.cache_len))
+        cache_len = self.cfg.cache_len
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, cache_len=cache_len))
+        vocab = model.cfg.vocab_size
+        self._sample = jax.jit(partial(sampling.sample_tokens,
+                                       vocab_size=vocab))
+        # fused-loop variant: per-slot base keys folded with the per-slot
+        # token index *on device*, one executable call per step (no
+        # host-side fold_in round-trips inside the timed decode loop)
+        self._sample_at = jax.jit(
+            lambda lg, keys, steps, t, k, p: sampling.sample_tokens(
+                lg, jax.vmap(jax.random.fold_in)(keys, steps), t, k, p,
+                vocab_size=vocab))
+        # greedy fast path: all-greedy batches (the default) skip the
+        # top-k/top-p sorts and the categorical draw entirely
+        self._greedy = jax.jit(lambda lg: jnp.argmax(
+            sampling.mask_vocab(lg, vocab), axis=-1).astype(jnp.int32))
+        self.stats = EngineStats()
+
+    # -- construction helpers ----------------------------------------------
+    @classmethod
+    def from_arch(cls, arch: str, use_reduced: bool = True, seed: int = 0,
+                  cfg: Optional[SchedulerConfig] = None, **kw
+                  ) -> "InferenceEngine":
+        from repro.configs import get_arch, reduced as reduce_cfg
+        spec = get_arch(arch)
+        mcfg = reduce_cfg(spec.model) if use_reduced else spec.model
+        model = model_zoo.build_model(mcfg, dtype=jnp.float32, remat="none")
+        params = model_zoo.init_params(jax.random.PRNGKey(seed), mcfg)
+        return cls(model, params, cfg=cfg, **kw)
+
+    # -- admission: bucketed prefill + exact remainder replay ---------------
+    def _admit(self, slot: int, req: Request,
+               on_token: Optional[OnToken]) -> None:
+        t0 = time.time()
+        split = prefill_split(req.prompt_len, self.scheduler.ladder)
+        toks = jnp.asarray(req.tokens, jnp.int32)[None, :]
+        logits, one = self._prefill(self.params, {"tokens": toks[:, :split]})
+        for i in range(split, req.prompt_len):
+            logits, one = self.state.decode(self.params, one,
+                                            toks[:, i:i + 1])
+        sp = req.sampling
+        if sp.temperature <= 0.0:
+            first = int(self._greedy(logits)[0])
+        else:
+            key = sampling.step_key(
+                sampling.request_key(sp.seed, req.uid), 0)[None]
+            first = int(self._sample(
+                logits, key,
+                jnp.full((1,), sp.temperature, jnp.float32),
+                jnp.full((1,), sp.top_k, jnp.int32),
+                jnp.full((1,), sp.top_p, jnp.float32))[0])
+        self.cache = self.state.insert(self.cache, slot, one)
+        dt = time.time() - t0
+        self.stats.prefill_s += dt
+        self.stats.prefill_tokens += req.prompt_len
+        self.stats.admitted += 1
+        self.stats.generated_tokens += 1
+        st = self.scheduler.activate(slot, req, first, dt)
+        if on_token:
+            on_token(req.uid, first)
+        reason = self.scheduler.stop_reason(st)
+        if reason:
+            self._retire(slot, reason)
+
+    def _retire(self, slot: int, reason: str) -> GenerationResult:
+        self.cache = self.state.evict(self.cache, slot)
+        res = self.scheduler.finish(slot, reason)
+        res.decode_steps = max(len(res.tokens) - 1, 0)
+        return res
+
+    # -- the fused decode step ---------------------------------------------
+    def _fused_step(self, on_token: Optional[OnToken]) -> None:
+        n = self.cfg.n_slots
+        toks = np.zeros((n, 1), np.int32)
+        temps = np.zeros((n,), np.float32)
+        topk = np.zeros((n,), np.int32)
+        topp = np.ones((n,), np.float32)
+        keys = np.zeros((n, 2), np.uint32)
+        steps = np.zeros((n,), np.int32)
+        active_now: List[tuple] = list(self.scheduler.active.items())
+        all_greedy = True
+        for slot, st in active_now:
+            sp = st.request.sampling
+            toks[slot, 0] = st.last_token
+            temps[slot] = sp.temperature
+            topk[slot] = sp.top_k
+            topp[slot] = sp.top_p
+            if sp.temperature > 0.0:
+                all_greedy = False
+                keys[slot] = st.base_key
+                steps[slot] = st.n_generated
+        t0 = time.time()
+        logits, self.cache = self.state.decode(self.params, self.cache,
+                                               jnp.asarray(toks))
+        if all_greedy:
+            nxt = np.asarray(self._greedy(logits))
+        else:
+            nxt = np.asarray(self._sample_at(
+                logits, jnp.asarray(keys), jnp.asarray(steps),
+                jnp.asarray(temps), jnp.asarray(topk), jnp.asarray(topp)))
+        dt = time.time() - t0
+        self.stats.step_times.append(dt)
+        self.stats.decode_s += dt
+        self.stats.decode_steps += 1
+        self.stats.generated_tokens += len(active_now)
+        for slot, st in active_now:
+            tok = int(nxt[slot])
+            st.result.tokens.append(tok)
+            st.last_token = tok
+            if on_token:
+                on_token(st.request.uid, tok)
+            reason = self.scheduler.stop_reason(st)
+            if reason:
+                self._retire(slot, reason)
+
+    # -- driver -------------------------------------------------------------
+    def run(self, requests: Sequence[Request],
+            on_token: Optional[OnToken] = None) -> List[GenerationResult]:
+        """Generate for all ``requests``; returns results in request order.
+
+        ``on_token(uid, token)`` streams tokens as they are produced (the
+        first token of a request arrives during its admission prefill).
+        The engine is reusable: each call drains its own request set and
+        hands back exactly those results (uids must be unique per call).
+        Validation is all-or-nothing: a bad request enqueues nothing.
+        """
+        requests = list(requests)  # tolerate generators: iterated 3 times
+        self.scheduler.submit_all(requests)
+        while self.scheduler.busy:
+            while True:
+                adm = self.scheduler.next_admission()
+                if adm is None:
+                    break
+                self._admit(*adm, on_token)
+            if self.scheduler.active:
+                self._fused_step(on_token)
+        done, self.scheduler.finished = self.scheduler.finished, []
+        by_uid: Dict[int, GenerationResult] = {r.uid: r for r in done}
+        return [by_uid[r.uid] for r in requests]
+
+    def reset_stats(self) -> EngineStats:
+        """Swap in a fresh stats accumulator (returns the old one)."""
+        old, self.stats = self.stats, EngineStats()
+        return old

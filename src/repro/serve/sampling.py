@@ -1,0 +1,83 @@
+"""Sampling as pure functions of (logits, rng): greedy / temperature /
+top-k / top-p, vectorized over the slot axis with *per-slot* parameters.
+
+Everything here is jit-friendly and shape-stable: the per-slot parameter
+vectors (temperature, top_k, top_p) are runtime arrays, so one compiled
+``sample_tokens`` executable serves every mix of sampling configurations the
+scheduler composes into a decode batch.  ``temperature <= 0`` rows take the
+greedy argmax and never consume randomness.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mask_vocab(logits: jax.Array, vocab_size: Optional[int]) -> jax.Array:
+    """Mask padded vocab columns (models round the table up to 128)."""
+    logits = logits.astype(jnp.float32)
+    if vocab_size is not None and logits.shape[-1] != vocab_size:
+        iota = jnp.arange(logits.shape[-1])
+        logits = jnp.where(iota[None, :] < vocab_size, logits, NEG_INF)
+    return logits
+
+
+def apply_top_k(logits: jax.Array, top_k: jax.Array) -> jax.Array:
+    """Keep the k largest logits per row; k <= 0 disables. logits (B, V),
+    top_k (B,) int32."""
+    v = logits.shape[-1]
+    k = jnp.where(top_k <= 0, v, jnp.clip(top_k, 1, v))
+    sorted_desc = jnp.sort(logits, axis=-1)[:, ::-1]
+    kth = jnp.take_along_axis(sorted_desc, (k - 1)[:, None], axis=-1)
+    return jnp.where(logits < kth, NEG_INF, logits)
+
+
+def apply_top_p(logits: jax.Array, top_p: jax.Array) -> jax.Array:
+    """Nucleus truncation: keep the smallest prefix of descending-prob
+    tokens whose *exclusive* cumulative mass is < top_p (the argmax row is
+    always kept). logits (B, V), top_p (B,) float."""
+    v = logits.shape[-1]
+    sorted_desc = jnp.sort(logits, axis=-1)[:, ::-1]
+    probs = jax.nn.softmax(sorted_desc, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # the argmax (first sorted position) survives even top_p == 0
+    keep = ((cum - probs) < top_p[:, None]) | (jnp.arange(v)[None, :] == 0)
+    # smallest kept logit is the admission threshold in the original order
+    thresh = jnp.min(jnp.where(keep, sorted_desc, jnp.inf), axis=-1,
+                     keepdims=True)
+    return jnp.where(logits < thresh, NEG_INF, logits)
+
+
+def sample_tokens(logits: jax.Array, keys: jax.Array, temperature: jax.Array,
+                  top_k: jax.Array, top_p: jax.Array,
+                  vocab_size: Optional[int] = None) -> jax.Array:
+    """One next-token per row.  logits (B, V); keys (B, 2) uint32 PRNG keys
+    (one independent stream per slot); temperature/top_p (B,) float,
+    top_k (B,) int32.  Returns (B,) int32.
+
+    Conventional warper order (matching mainstream servers): temperature
+    scaling first, then top-k, then top-p — so the nucleus is computed on
+    the *sharpened* distribution.
+    """
+    logits = mask_vocab(logits, vocab_size)
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    masked = apply_top_p(apply_top_k(scaled, top_k), top_p)
+    sampled = jax.vmap(
+        lambda key, row: jax.random.categorical(key, row))(keys, masked)
+    return jnp.where(temperature <= 0.0, greedy_tok,
+                     sampled.astype(jnp.int32))
+
+
+def request_key(seed: int, uid: int) -> jax.Array:
+    """Base PRNG key for one request (independent of batch composition)."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), uid)
+
+
+def step_key(base: jax.Array, step: int) -> jax.Array:
+    """Per-generated-token key within a request's stream."""
+    return jax.random.fold_in(base, step)

@@ -1,0 +1,166 @@
+"""Continuous-batching scheduler: length-bucketed admission into fixed slots.
+
+Admission control reuses the training side's TPU adaptation verbatim: the
+prompt length is quantized *down* onto ``core.pacing.bucket_ladder`` (the
+same ladder that bounds jit cache churn for the SLW curriculum), the bucket
+prefix runs through the jitted prefill — one compiled executable per bucket
+— and the sub-bucket remainder replays through the decode step, which is
+exact for every backbone (no padding, no masked prefill).  The paper's
+observation that sequence-length heterogeneity dominates cost applies
+unchanged at serving time: ragged prompts land on a bounded shape set, and
+ragged generation lengths are absorbed by per-slot eviction + backfill.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import SLWConfig
+from repro.core.pacing import bucket_ladder, quantize
+from repro.serve.types import GenerationResult, Request
+from repro.serve import sampling
+
+
+@dataclass(frozen=True)
+class SchedulerConfig:
+    """Knobs for slot/bucket composition.
+
+    n_slots:      decode batch width (fixed; empty slots decode garbage that
+                  is never surfaced)
+    cache_len:    per-slot KV/state capacity; every request must satisfy
+                  prompt_len + max_tokens <= cache_len
+    prompt ladder (min_prompt_bucket / round_multiple / max_buckets): feeds
+                  core.pacing.bucket_ladder — at most max_buckets distinct
+                  prefill shapes ever compile.
+    """
+
+    n_slots: int = 8
+    cache_len: int = 512
+    min_prompt_bucket: int = 16
+    round_multiple: int = 32
+    max_buckets: int = 8
+
+    def ladder(self) -> Tuple[int, ...]:
+        slw = SLWConfig(enabled=True, start_seq_len=self.min_prompt_bucket,
+                        end_seq_len=self.cache_len,
+                        round_multiple=self.round_multiple,
+                        max_buckets=self.max_buckets)
+        return bucket_ladder(slw, self.cache_len)
+
+
+def prefill_split(prompt_len: int, ladder: Tuple[int, ...]) -> int:
+    """Tokens to prefill at a bucketed shape; the rest replays via decode.
+
+    Round-*down* quantization (paper semantics, ``pacing.quantize``);
+    prompts shorter than the smallest bucket prefill at their exact length.
+    """
+    return min(quantize(prompt_len, ladder), prompt_len)
+
+
+@dataclass
+class ActiveSlot:
+    """Host-side bookkeeping for one occupied slot."""
+
+    request: Request
+    result: GenerationResult
+    base_key: np.ndarray  # (2,) uint32 — host copy, folded on device
+    last_token: int = 0
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.result.tokens)
+
+
+class Scheduler:
+    """Admission queue + slot lifecycle.  The engine executes; the
+    scheduler decides which request occupies which slot and when a slot
+    retires (per-slot stopping: length budget or stop token)."""
+
+    def __init__(self, cfg: SchedulerConfig):
+        if cfg.n_slots < 1 or cfg.cache_len < 1:
+            raise ValueError(f"need n_slots >= 1 and cache_len >= 1, got "
+                             f"{cfg.n_slots}, {cfg.cache_len}")
+        self.cfg = cfg
+        self.ladder = cfg.ladder()
+        self.pending: Deque[Request] = deque()
+        self.active: Dict[int, ActiveSlot] = {}
+        self.free: List[int] = list(range(cfg.n_slots))[::-1]  # pop() -> 0 first
+        self.finished: List[GenerationResult] = []
+
+    # -- admission ---------------------------------------------------------
+    def _validate(self, request: Request, uids: set) -> None:
+        need = request.prompt_len + request.max_tokens
+        if need > self.cfg.cache_len:
+            raise ValueError(
+                f"request {request.uid}: prompt_len + max_tokens = {need} "
+                f"exceeds cache_len {self.cfg.cache_len}")
+        if request.max_tokens < 1:
+            raise ValueError(f"request {request.uid}: max_tokens must be >= 1")
+        if request.prompt_len < 1:
+            raise ValueError(f"request {request.uid}: empty prompt")
+        if request.uid in uids:
+            # uids key result routing and the per-request PRNG stream
+            raise ValueError(f"request uid {request.uid} already in flight")
+        uids.add(request.uid)
+
+    def _in_flight_uids(self) -> set:
+        return ({r.uid for r in self.pending}
+                | {s.request.uid for s in self.active.values()})
+
+    def submit(self, request: Request) -> None:
+        self._validate(request, self._in_flight_uids())
+        self.pending.append(request)
+
+    def submit_all(self, requests) -> None:
+        """All-or-nothing admission: a validation failure anywhere in the
+        batch enqueues nothing (a half-submitted batch would leak orphan
+        pending requests into the caller's next drain)."""
+        uids = self._in_flight_uids()
+        for r in requests:
+            self._validate(r, uids)
+        self.pending.extend(requests)
+
+    def next_admission(self) -> Optional[Tuple[int, Request]]:
+        """Pop (free slot, pending request) or None."""
+        if not self.pending or not self.free:
+            return None
+        return self.free.pop(), self.pending.popleft()
+
+    def activate(self, slot: int, request: Request,
+                 first_token: int, prefill_s: float) -> ActiveSlot:
+        st = ActiveSlot(
+            request=request,
+            result=GenerationResult(uid=request.uid,
+                                    prompt_len=request.prompt_len,
+                                    prefill_s=prefill_s),
+            base_key=np.asarray(sampling.request_key(request.sampling.seed,
+                                                     request.uid)),
+            last_token=first_token)
+        st.result.tokens.append(first_token)
+        self.active[slot] = st
+        return st
+
+    # -- stopping ----------------------------------------------------------
+    def stop_reason(self, st: ActiveSlot) -> str:
+        sp = st.request.sampling
+        if sp.stop_token is not None and st.result.tokens \
+                and st.result.tokens[-1] == sp.stop_token:
+            return "stop_token"
+        if st.n_generated >= st.request.max_tokens:
+            return "length"
+        return ""
+
+    def finish(self, slot: int, reason: str) -> GenerationResult:
+        st = self.active.pop(slot)
+        st.result.finish_reason = reason
+        self.free.append(slot)
+        self.finished.append(st.result)
+        return st.result
+
+    # -- state -------------------------------------------------------------
+    @property
+    def busy(self) -> bool:
+        return bool(self.active) or bool(self.pending)

@@ -1,0 +1,115 @@
+"""DecodeState: one slot-addressable interface over every backbone's cache.
+
+The transformer/MoE KV cache, the Mamba-2 and RWKV-6 recurrent states and
+the Zamba-2 hybrid cache all reduce to the same shape discipline: a pytree
+whose leaves carry a "batch" logical axis (the *slot* axis) plus a per-slot
+``pos`` vector.  ``SlotDecodeState`` implements the protocol generically
+from each model's ``cache_shapes``/``cache_axes`` contract — no per-family
+branches — with ``insert``/``evict``/``decode`` jitted and the state buffer
+donated, so slot surgery happens in place on the accelerator.
+"""
+from __future__ import annotations
+
+from typing import Any, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import is_axes_leaf
+from repro.models import model_zoo
+
+
+class DecodeState(Protocol):
+    """Slot-addressable decode cache for continuous batching."""
+
+    def init_slots(self, n_slots: int, cache_len: int) -> Any:
+        """Allocate a zeroed ``n_slots``-wide cache."""
+
+    def insert(self, cache: Any, slot: jax.Array, prefill_cache: Any) -> Any:
+        """Scatter one request's batch=1 prefill cache into ``slot``."""
+
+    def evict(self, cache: Any, slot: jax.Array) -> Any:
+        """Retire ``slot`` (resets its position bookkeeping)."""
+
+    def gather(self, cache: Any, slot: jax.Array) -> Any:
+        """Extract ``slot``'s state as a batch=1 cache (slot migration)."""
+
+    def decode(self, params: Any, cache: Any, tokens: jax.Array
+               ) -> Tuple[jax.Array, Any]:
+        """One fused decode step for all slots; per-slot positions."""
+
+
+def _tree_map_axes(fn, axes_tree, *trees):
+    return jax.tree_util.tree_map(fn, axes_tree, *trees,
+                                  is_leaf=is_axes_leaf)
+
+
+class SlotDecodeState:
+    """Generic ``DecodeState`` over any model with the uniform cache API.
+
+    ``slot`` arguments are traced int32 scalars, so one compiled
+    insert/evict executable serves every slot index.
+    """
+
+    def __init__(self, model):
+        self.model = model
+        self._axes = model.cache_axes()  # original axes ("pos" leaves = ())
+        self.slot_axes = model_zoo.decode_cache_axes(model)
+
+        def insert_fn(cache, slot, one):
+            def leaf(ax, c, p):
+                if "batch" in ax:
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        c, p.astype(c.dtype), slot, axis=ax.index("batch"))
+                # promoted bookkeeping leaf: scalar -> per-slot vector
+                return jax.lax.dynamic_update_slice_in_dim(
+                    c, jnp.asarray(p)[None].astype(c.dtype), slot, axis=0)
+            return _tree_map_axes(leaf, self._axes, cache, one)
+
+        def evict_fn(cache, slot):
+            def leaf(ax, c):
+                if "batch" in ax:
+                    return c  # rows are overwritten wholesale on next insert
+                zero = jnp.zeros((1,) + c.shape[1:], c.dtype)
+                return jax.lax.dynamic_update_slice_in_dim(c, zero, slot,
+                                                           axis=0)
+            return _tree_map_axes(leaf, self._axes, cache)
+
+        def gather_fn(cache, slot):
+            def leaf(ax, c):
+                if "batch" in ax:
+                    return jax.lax.dynamic_slice_in_dim(
+                        c, slot, 1, axis=ax.index("batch"))
+                return jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=0)[0]
+            return _tree_map_axes(leaf, self._axes, cache)
+
+        self._insert = jax.jit(insert_fn, donate_argnums=(0,))
+        self._evict = jax.jit(evict_fn, donate_argnums=(0,))
+        self._gather = jax.jit(gather_fn)
+        self._decode = jax.jit(model.decode, donate_argnums=(1,))
+
+    # -- protocol ----------------------------------------------------------
+    def init_slots(self, n_slots: int, cache_len: int) -> Any:
+        return model_zoo.init_decode_cache(self.model, n_slots, cache_len)
+
+    def insert(self, cache, slot, prefill_cache):
+        return self._insert(cache, jnp.asarray(slot, jnp.int32),
+                            prefill_cache)
+
+    def evict(self, cache, slot):
+        return self._evict(cache, jnp.asarray(slot, jnp.int32))
+
+    def gather(self, cache, slot):
+        return self._gather(cache, jnp.asarray(slot, jnp.int32))
+
+    def decode(self, params, cache, tokens):
+        return self._decode(params, cache, tokens)
+
+    # -- placement ---------------------------------------------------------
+    def shardings(self, rules, n_slots: int, cache_len: int):
+        """NamedSharding tree for the slot cache under activation rules
+        (slot axis rides the "batch" rule — see sharding.tree_act_shardings).
+        """
+        from repro.distributed.sharding import tree_act_shardings
+        specs = model_zoo.decode_cache_specs(self.model, n_slots, cache_len)
+        return tree_act_shardings(rules, self.slot_axes, specs)

@@ -1,0 +1,63 @@
+"""Typed serving API surface: Request -> GenerationResult.
+
+Frozen dataclasses so request/sampling configurations are hashable and safe
+to log, diff and replay.  ``SamplingParams`` defaults to greedy decoding
+(``temperature == 0``), which is the mode the engine-vs-legacy parity tests
+pin down tokenwise.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Pure-function-of-logits sampling configuration (see serve.sampling).
+
+    temperature == 0 selects greedy argmax (rng unused); top_k == 0 and
+    top_p == 1.0 disable the respective truncations.  ``seed`` derives the
+    per-request PRNG stream — results are reproducible independently of
+    batch composition or admission order.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+    stop_token: Optional[int] = None
+
+    def replace(self, **kw) -> "SamplingParams":
+        import dataclasses
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class Request:
+    """One generation request: prompt tokens + a generation budget."""
+
+    uid: int
+    tokens: Tuple[int, ...]
+    max_tokens: int = 16
+    sampling: SamplingParams = field(default_factory=SamplingParams)
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.tokens)
+
+
+@dataclass
+class GenerationResult:
+    """Completed (or in-flight) generation for one request."""
+
+    uid: int
+    prompt_len: int
+    tokens: list = field(default_factory=list)
+    finish_reason: str = ""  # length | stop_token | aborted
+    # engine accounting (host wall-clock, seconds)
+    prefill_s: float = 0.0
+    decode_steps: int = 0
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.tokens)

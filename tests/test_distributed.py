@@ -46,6 +46,36 @@ def test_rules_conflict_and_divisibility_fallback():
     assert "RULES_OK" in out
 
 
+def test_serve_slot_state_shardings():
+    """serve_tp placement of the engine's slot cache: the slot axis (the
+    cache's "batch" logical axis, incl. the promoted per-slot pos vector)
+    spreads over the data mesh axis; TP axes stay on model."""
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from repro.configs import get_arch, reduced
+        from repro.distributed.sharding import (ShardingRules,
+                                                tree_act_shardings)
+        from repro.launch.mesh import make_host_mesh
+        from repro.models import model_zoo
+        from repro.serve import SlotDecodeState
+
+        mesh = make_host_mesh((4, 2), ("data", "model"))
+        rules = ShardingRules.make(mesh, "serve_tp")
+        cfg = reduced(get_arch("gpt2-117m").model)
+        model = model_zoo.build_model(cfg, dtype=jnp.float32, remat="none")
+        shards = SlotDecodeState(model).shardings(rules, n_slots=8,
+                                                  cache_len=32)
+        P = jax.sharding.PartitionSpec
+        assert shards["k"].spec[1] == "data", shards["k"].spec   # slot axis
+        assert shards["pos"].spec == P("data"), shards["pos"].spec
+        cache = model_zoo.init_decode_cache(model, 8, 32)
+        cache = jax.device_put(cache, shards)
+        assert cache["k"].sharding.spec[1] == "data"
+        print("SLOT_SHARD_OK")
+    """)
+    assert "SLOT_SHARD_OK" in out
+
+
 def test_flash_decode_sharded_matches_reference():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
