@@ -17,8 +17,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Row
-from repro.kernels import flash_attention, ssd, wkv6
+from repro.kernels import flash_attention, flash_decode, ssd, wkv6
 from repro.kernels.flash_attention.ref import attention_reference_gqa
+from repro.kernels.flash_decode.ref import decode_attention_reference
 from repro.kernels.rwkv6.ref import wkv6_sequential
 from repro.kernels.ssd.ref import ssd_fwd_reference
 
@@ -70,6 +71,22 @@ def run(quick: bool = False) -> List[Row]:
     rows.append(("kernels/flash_attention_bwd_interp", us,
                  f"grad_max_err={gerr:.2e} "
                  f"causal_tpu_flops={2.5 * tpu_flops:.2e}"))
+
+    # flash decode (inference-only: one query row per slot, ragged lengths)
+    bd, sd, hd, kvd, dd = 4, 256, 4, 2, 32
+    qd = jax.random.normal(ks[4], (bd, hd, dd))
+    kc = jax.random.normal(ks[5], (bd, sd, kvd, dd))
+    vc = jax.random.normal(ks[6], (bd, sd, kvd, dd))
+    lengths = jnp.asarray([1, 97, 200, 256], jnp.int32)
+    f_fd = lambda: flash_decode(qd, kc, vc, lengths, block_k=64,
+                                interpret=True)
+    us = _timeit(lambda *_: f_fd())
+    ref_fd = decode_attention_reference(qd, kc, vc, lengths)
+    err = float(jnp.max(jnp.abs(f_fd() - ref_fd)))
+    # one (G, D) x (S, D)^T score matmul + the p @ V accumulate per kv head
+    fd_flops = 2 * 2 * bd * hd * sd * dd
+    rows.append(("kernels/flash_decode_interp", us,
+                 f"max_err={err:.2e} tpu_flops={fd_flops:.2e}"))
 
     # ssd
     b2, h2, s2, p2, n2, ck = 1, 2, 256, 32, 16, 64

@@ -12,6 +12,11 @@ Rows (``--json`` via benchmarks.run writes BENCH_serve.json):
   serve/engine_decode       us per useful token + tok/s + p50/p95 latency
   serve/static_decode       us per useful token + tok/s (legacy path)
   serve/continuous_vs_static  decode-throughput speedup (the gate: > 1x)
+  serve/batched_prefill     (k, bucket) admission prefill; tokens must
+                            match sequential admission exactly
+  serve/decode_kernel_interpret  fused decode through the flash-decode
+                            kernel (interpret mode on CPU — the timing is
+                            plumbing, the parity column is the gate)
 """
 from __future__ import annotations
 
@@ -86,6 +91,33 @@ def run(quick: bool = False) -> List[Row]:
     st_s, st_useful = _static_decode(model, params, reqs, cache_len)
     st_tok_s = st_useful / max(st_s, 1e-9)
 
+    # batched-prefill arm: same workload, up to SLOTS same-bucket prompts
+    # per (k, bucket) prefill call — tokens must match sequential admission
+    sched_b = SchedulerConfig(n_slots=SLOTS, cache_len=cache_len,
+                              min_prompt_bucket=16, round_multiple=16,
+                              max_buckets=6, prefill_batch=SLOTS)
+    eng_b = InferenceEngine(model, params, sched_b)
+    # warm the full (k, bucket) shape set: backfill admissions see every
+    # k in 1..SLOTS, so a 2-request warm-up would leave compiles in the
+    # timed run
+    eng_b.run(_requests(cfg.vocab_size, n_requests, seed=1))
+    eng_b.reset_stats()
+    res_b = eng_b.run(reqs)
+    bp_match = all(a.tokens == b.tokens for a, b in zip(res_b, results))
+    sb = eng_b.stats
+
+    # decode-backend arm: the fused step through the flash-decode kernel
+    # (interpret mode off-TPU, so a small request subset keeps this cheap)
+    kmodel = model_zoo.build_model(cfg.replace(
+        decode_backend="kernel_interpret"), dtype=jnp.float32, remat="none")
+    eng_k = InferenceEngine(kmodel, params, sched)
+    sub = reqs[:4]
+    eng_k.run(_requests(cfg.vocab_size, 2, seed=2))  # compile warm-up
+    eng_k.reset_stats()
+    res_k = eng_k.run(sub)
+    dk_match = all(a.tokens == b.tokens for a, b in zip(res_k, results[:4]))
+    sk = eng_k.stats
+
     speedup = s.decode_tok_s / max(st_tok_s, 1e-9)
     rows: List[Row] = [
         ("serve/engine_prefill", 1e6 * s.prefill_s / max(s.prefill_tokens, 1),
@@ -102,6 +134,15 @@ def run(quick: bool = False) -> List[Row]:
         ("serve/continuous_vs_static", 0.0,
          f"decode_speedup={speedup:.2f}x slots={SLOTS} "
          f"requests={n_requests}"),
+        ("serve/batched_prefill",
+         1e6 * sb.prefill_s / max(sb.prefill_tokens, 1),
+         f"tok_s={sb.prefill_tok_s:.0f} prefill_batch={SLOTS} "
+         f"parity={'exact' if bp_match else 'MISMATCH'}"),
+        ("serve/decode_kernel_interpret",
+         1e6 * sk.decode_s / max(sk.generated_tokens - sk.admitted, 1),
+         f"tok_s={sk.decode_tok_s:.0f} backend=kernel_interpret "
+         f"requests={len(sub)} "
+         f"parity={'exact' if dk_match else 'MISMATCH'}"),
     ]
     return rows
 

@@ -35,6 +35,13 @@ class ModelConfig:
     #   flash_interpret  – force the kernel in interpret mode (CPU
     #                      validation / tests; slow)
     attn_backend: str = "blockwise"
+    # decode (serving) attention backend, mirroring ssm/rwkv backends:
+    #   reference        – jnp masked softmax over the full cache (default;
+    #                      materializes the (B, KV, G, 1, S_max) score row)
+    #   kernel           – Pallas split-KV flash-decode kernel on TPU;
+    #                      silently falls back to reference off-TPU
+    #   kernel_interpret – force the kernel in interpret mode (CPU tests)
+    decode_backend: str = "reference"
     rope_theta: float = 10000.0
     pos_emb: str = "rope"  # rope | learned | none
     # block options

@@ -23,6 +23,9 @@ GPT2_117M = ModelConfig(
     # the training hot path: Pallas flash attention (fwd + bwd) on TPU;
     # blockwise fallback keeps CPU smoke tests and the dry-run unchanged
     attn_backend="flash",
+    # serving hot path: Pallas split-KV flash-decode on TPU (reference
+    # fallback elsewhere)
+    decode_backend="kernel",
 )
 
 GPT2_1P5B = GPT2_117M.replace(

@@ -16,6 +16,7 @@ MODEL = ModelConfig(
     vocab_size=49152,
     tie_embeddings=True,
     attn_backend="flash",  # Pallas kernel on TPU; blockwise fallback off-TPU
+    decode_backend="kernel",  # split-KV flash-decode on TPU (serving)
 )
 
 SPEC = ArchSpec(

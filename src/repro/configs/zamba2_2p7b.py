@@ -20,6 +20,7 @@ MODEL = ModelConfig(
     ssm_expand=2,
     attn_every=6,  # 54 / 6 = 9 shared-block applications
     ssm_backend="kernel",  # Pallas SSD fwd+bwd on TPU (reference off-TPU)
+    decode_backend="kernel",  # split-KV flash-decode for the shared attn block
 )
 
 SPEC = ArchSpec(

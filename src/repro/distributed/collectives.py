@@ -8,54 +8,66 @@ flash-decoding formulation computes a *partial* softmax per shard and merges
 (max, sum-exp, weighted-value) triples with three tiny collectives — bytes
 proportional to B*H*D instead of B*S*KV*D.
 
+Masking convention — **pos = count of valid entries** (cache row ``j`` is
+valid iff ``j < pos``), shared with ``models.attention.decode_attention``
+and the flash-decode kernel.  The per-shard partial is the same
+``(o, m, l)`` triple the kernel emits
+(``kernels.flash_decode.ops.flash_decode_partials``), so the sharded merge
+can consume kernel partials directly: ``backend="kernel"`` runs the Pallas
+split-KV kernel inside each shard instead of the jnp local term.
+
 This is the beyond-paper §Perf lever for the decode-bound cells.
 """
 from __future__ import annotations
 
-import functools
-import math
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.distributed.compat import shard_map
+from repro.kernels import resolve_backend
+from repro.kernels.flash_decode.ops import flash_decode_partials
+from repro.kernels.flash_decode.ref import (decode_attention_reference,
+                                            decode_partials_reference)
 
-NEG_INF = -1e30
 
-
-def flash_decode_sharded(mesh: Mesh, seq_axis: str = "data"):
+def flash_decode_sharded(mesh: Mesh, seq_axis: str = "data",
+                         backend: str = "reference"):
     """Returns fn(q, k_cache, v_cache, pos) -> out.
 
     q: (B, 1, H, D) replicated over `seq_axis`;
     k_cache/v_cache: (B, S, KV, D) sharded along S over `seq_axis`;
-    pos: () int32, number of valid cache entries (global).
+    pos: () int32, count of valid cache entries (global).
+
+    ``backend`` selects the per-shard partial: "reference" (jnp oracle),
+    "kernel" (Pallas flash-decode kernel, compiled on TPU / reference
+    fallback elsewhere) or "kernel_interpret" (kernel in interpret mode —
+    the CPU validation path).
     """
-    n_shards = mesh.shape[seq_axis]
+    use_kernel, interpret = resolve_backend(backend, "decode backend")
 
     def local(q, k, v, pos):
         b, sq, h, d = q.shape
-        s_local, kvh = k.shape[1], k.shape[2]
-        g = h // kvh
+        assert sq == 1, "flash decode serves one token per step"
+        s_local = k.shape[1]
         shard = jax.lax.axis_index(seq_axis)
         base = shard * s_local  # global position of this shard's first entry
-        scale = 1.0 / math.sqrt(d)
-        qg = q.reshape(b, sq, kvh, g, d) * scale
-        s = jnp.einsum("bqkgd,bjkd->bkgqj", qg, k).astype(jnp.float32)
-        valid = (base + jnp.arange(s_local)) < pos
-        s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
-        m = s.max(axis=-1)  # (B,KV,G,1)
-        p = jnp.exp(s - m[..., None])
-        l = p.sum(axis=-1)
-        o = jnp.einsum("bkgqj,bjkd->bkgqd", p.astype(v.dtype), v)
+        # count of valid entries inside this shard (empty shards yield
+        # (o, m, l) = (0, NEG_INF, 0) and drop out of the merge exactly)
+        lengths = jnp.broadcast_to(
+            jnp.clip(pos - base, 0, s_local), (b,)).astype(jnp.int32)
+        if use_kernel:
+            o, m, l = flash_decode_partials(q[:, 0], k, v, lengths,
+                                            interpret=interpret)
+        else:
+            o, m, l = decode_partials_reference(q[:, 0], k, v, lengths)
         # merge partial softmaxes across shards
         gm = jax.lax.pmax(m, seq_axis)
         corr = jnp.exp(m - gm)
         l_tot = jax.lax.psum(l * corr, seq_axis)
-        o_tot = jax.lax.psum(o.astype(jnp.float32) * corr[..., None], seq_axis)
+        o_tot = jax.lax.psum(o * corr[..., None], seq_axis)
         out = o_tot / jnp.maximum(l_tot[..., None], 1e-30)
-        return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d).astype(q.dtype)
+        return out.reshape(b, sq, h, d).astype(q.dtype)
 
     def apply(q, k_cache, v_cache, pos):
         kv_spec = P(None, seq_axis, None, None)
@@ -69,15 +81,10 @@ def flash_decode_sharded(mesh: Mesh, seq_axis: str = "data"):
 
 
 def reference_decode(q, k_cache, v_cache, pos):
-    """Unsharded oracle for flash_decode_sharded."""
+    """Unsharded oracle for flash_decode_sharded (pos = count of valid
+    entries, scalar or per-row (B,) vector)."""
     b, sq, h, d = q.shape
-    kvh = k_cache.shape[2]
-    g = h // kvh
-    scale = 1.0 / math.sqrt(d)
-    qg = q.reshape(b, sq, kvh, g, d) * scale
-    s = jnp.einsum("bqkgd,bjkd->bkgqj", qg, k_cache).astype(jnp.float32)
-    valid = jnp.arange(k_cache.shape[1]) < pos
-    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bkgqj,bjkd->bkgqd", p.astype(v_cache.dtype), v_cache)
-    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d).astype(q.dtype)
+    assert sq == 1, "flash decode serves one token per step"
+    lengths = jnp.broadcast_to(jnp.asarray(pos), (b,)).astype(jnp.int32)
+    out = decode_attention_reference(q[:, 0], k_cache, v_cache, lengths)
+    return out.reshape(b, sq, h, d).astype(q.dtype)

@@ -14,6 +14,11 @@ public wrapper, interpret-mode fallback off-TPU), ref.py (pure-jnp oracle).
   ``ModelConfig.ssm_backend = "kernel"``.
 * rwkv6           — chunked WKV with data-dependent per-channel decay;
   likewise differentiable (``ModelConfig.rwkv_backend = "kernel"``).
+* flash_decode    — split-KV decode attention on the serving hot path: one
+  query row per slot against a KV-blocked cache with per-slot valid-length
+  masking; emits (m, l, o) partials so the sharded flash-decoding merge
+  consumes the same algebra.  Inference-only (no backward); selected via
+  ``ModelConfig.decode_backend = "kernel"``.
 
 The shared backend/interpret resolution lives here so the three ops.py
 wrappers agree on one rule: kernels compile only on real TPU; everywhere
@@ -66,5 +71,7 @@ def chunk_padding(s: int, chunk: int) -> "tuple[int, int]":
 
 
 from repro.kernels.flash_attention.ops import flash_attention  # noqa: E402,F401
+from repro.kernels.flash_decode.ops import (flash_decode,  # noqa: E402,F401
+                                            flash_decode_partials)
 from repro.kernels.rwkv6.ops import wkv6  # noqa: E402,F401
 from repro.kernels.ssd.ops import ssd  # noqa: E402,F401

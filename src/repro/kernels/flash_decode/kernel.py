@@ -1,0 +1,139 @@
+"""Pallas TPU flash-decode: split-KV decode attention over a slot cache.
+
+One query row per slot (the fused decode step's token) attends to that
+slot's KV cache rows, of which only the first ``lengths[b]`` are valid
+("pos = count of valid entries" — the convention shared with
+``models.attention.decode_attention`` and
+``distributed.collectives.flash_decode_sharded``).  The jnp decode path
+materializes the full ``(slots, KV, G, 1, S_max)`` score tensor per layer
+per token; here the cache is streamed in KV blocks and the online-softmax
+carry ``(m, l, acc)`` lives in VMEM scratch, so the high-water is
+O(G * block_k) per (slot, kv-head) cell.
+
+Grid ``(B, KV, kv_blocks)`` with the kv axis minor: the TPU executes the
+grid sequentially, so each (slot, kv-head) cell accumulates its partial
+softmax across kv iterations and finalizes at the last block.  GQA is
+native — the query block is the whole ``(G, D)`` group for one kv head, so
+no head expansion ever materializes.  There is no backward pass: decode is
+inference-only.
+
+The kernel emits *partials* ``(o_unnormalized, m, l)`` rather than the
+normalized context: ops.py divides for the single-host path, and
+``distributed.collectives.flash_decode_sharded`` merges per-shard partials
+with pmax/psum — the same (m, l, o) algebra in both places.
+
+Blocks entirely past a slot's valid length skip their flops via
+``pl.when``; their HBM fetches are *not* yet elided (that needs
+scalar-prefetch index maps so the block index can be clamped by
+``lengths`` — see the ROADMAP TPU bring-up checklist).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref,
+                   m_scr, l_scr, acc_scr, *, block_k: int, kv_blocks: int,
+                   scale: float):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0, 0]  # this slot's count of valid cache entries
+
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)       # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (block_k, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        col = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        valid = col < length
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        # mask p explicitly: on a fully-masked block m_new stays NEG_INF and
+        # exp(s - m_new) would be exp(0) = 1, polluting l with dead columns
+        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = (acc_scr[...] * corr
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    # skip blocks entirely past this slot's valid length (flops only; the
+    # fetch still happens — see module docstring)
+    @pl.when(ki * block_k < length)
+    def _run():
+        _body()
+
+    @pl.when(ki == kv_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = acc_scr[...]
+        m_ref[0, 0] = m_scr[:, 0]
+        l_ref[0, 0] = l_scr[:, 0]
+
+
+def flash_decode_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array, *, block_k: int = 128,
+                     interpret: bool = False
+                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """q: (B, KV, G, D); k, v: (B, S, KV, D); lengths: (B,) int32 counts.
+
+    S must be a multiple of ``block_k`` (ops.py pads; padded rows are dead
+    because ``lengths <= S_orig``).  Returns fp32 partials
+    ``(o (B, KV, G, D) unnormalized, m (B, KV, G), l (B, KV, G))`` — the
+    caller normalizes ``o / l`` or psum-merges across sequence shards.
+    """
+    b, kvh, g, d = q.shape
+    s = k.shape[1]
+    assert s % block_k == 0, (s, block_k)
+    kv_blocks = s // block_k
+    scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(_decode_kernel, block_k=block_k,
+                               kv_blocks=kv_blocks, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, kvh, kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda b, h, ki: (b, ki, h, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda b, h, ki: (b, ki, h, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, ki: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, g), lambda b, h, ki: (b, h, 0)),
+            pl.BlockSpec((1, 1, g), lambda b, h, ki: (b, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kvh, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, kvh, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, kvh, g), jnp.float32),
+        ],
+        scratch_shapes=[
+            _vmem((g, 1), jnp.float32),  # m: running row max
+            _vmem((g, 1), jnp.float32),  # l: running row sum
+            _vmem((g, d), jnp.float32),  # acc: weighted values
+        ],
+        interpret=interpret,
+    )(q, k, v, lengths.astype(jnp.int32).reshape(b, 1))
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,63 @@
+"""Jit'd public wrappers for the flash-decode kernel.
+
+Model-facing layout: q ``(B, H, D)`` (one token per slot), cache
+``(B, S, KV, D)``, ``lengths (B,)`` int32 = count of valid entries per
+slot.  The wrapper folds GQA to the kernel's native ``(B, KV, G, D)``
+query grouping (no head expansion), zero-pads the cache sequence to a
+``block_k`` multiple (dead rows: ``lengths <= S``), and either normalizes
+the partials (``flash_decode``) or hands them to the caller
+(``flash_decode_partials`` — the per-shard term of
+``distributed.collectives.flash_decode_sharded``).
+
+Off-TPU the kernel runs in interpret mode (see kernels.resolve_interpret),
+so the serving tests validate the exact kernel body on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import chunk_padding, resolve_interpret
+from repro.kernels.flash_decode.kernel import flash_decode_fwd
+
+
+def _run_kernel(q, k_cache, v_cache, lengths, block_k, interpret):
+    b, h, d = q.shape
+    s, kvh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, d)
+    block_k, pad = chunk_padding(s, block_k)
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return flash_decode_fwd(qg, k_cache, v_cache, lengths,
+                            block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                 lengths: jax.Array, *, block_k: int = 128,
+                 interpret: bool | None = None) -> jax.Array:
+    """Normalized decode attention: returns context ``(B, H, D)`` like q."""
+    o, _, l = _run_kernel(q, k_cache, v_cache, lengths, block_k,
+                          resolve_interpret(interpret))
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    b, h, d = q.shape
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def flash_decode_partials(q: jax.Array, k_cache: jax.Array,
+                          v_cache: jax.Array, lengths: jax.Array, *,
+                          block_k: int = 128,
+                          interpret: bool | None = None
+                          ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Unnormalized fp32 partials ``(o (B,KV,G,D), m (B,KV,G), l (B,KV,G))``.
+
+    Merge rule (what ``flash_decode_sharded`` runs across shards):
+    ``gm = max(m); out = sum(o * exp(m-gm)) / sum(l * exp(m-gm))``.
+    """
+    return _run_kernel(q, k_cache, v_cache, lengths, block_k,
+                       resolve_interpret(interpret))

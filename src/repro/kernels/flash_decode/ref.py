@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for the flash-decode kernel.
+
+Both functions use the shared decode masking convention — **lengths[b] is
+the count of valid cache entries** for slot ``b``: cache row ``j`` attends
+iff ``j < lengths[b]``.  ``decode_partials_reference`` is also the local
+(per-shard) term ``distributed.collectives.flash_decode_sharded`` merges,
+so kernel, jnp decode path and the sharded merge agree on one algebra.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_partials_reference(q: jax.Array, k_cache: jax.Array,
+                              v_cache: jax.Array, lengths: jax.Array
+                              ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Partial-softmax triple for one decode step.
+
+    q: (B, H, D); k_cache, v_cache: (B, S, KV, D) with H = KV * G;
+    lengths: (B,) int32 counts of valid entries.  Returns fp32
+    ``(o (B, KV, G, D) unnormalized, m (B, KV, G), l (B, KV, G))``;
+    fully-masked slots yield (0, NEG_INF, 0), so a psum/pmax merge across
+    shards drops them exactly like the kernel does.
+    """
+    b, h, d = q.shape
+    kvh = k_cache.shape[2]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, kvh, g, d).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgd,bjkd->bkgj", qg,
+                   k_cache.astype(jnp.float32))
+    valid = jnp.arange(k_cache.shape[1])[None, :] < lengths[:, None]  # (B, S)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    m = s.max(axis=-1)
+    p = jnp.where(valid[:, None, None], jnp.exp(s - m[..., None]), 0.0)
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bkgj,bjkd->bkgd", p, v_cache.astype(jnp.float32))
+    return o, m, l
+
+
+def decode_attention_reference(q: jax.Array, k_cache: jax.Array,
+                               v_cache: jax.Array, lengths: jax.Array
+                               ) -> jax.Array:
+    """Normalized decode attention: q (B, H, D) -> context (B, H, D)."""
+    b, h, d = q.shape
+    o, _, l = decode_partials_reference(q, k_cache, v_cache, lengths)
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, h, d).astype(q.dtype)

@@ -99,7 +99,8 @@ def serve_engine(arch: str, use_reduced: bool, n_slots: int, prompt_len: int,
                  gen_tokens: int, n_requests: int = 0, cache_len: int = 0,
                  seed: int = 0, ragged: bool = True,
                  sampling: SamplingParams = SamplingParams(),
-                 sched: SchedulerConfig = None, quiet: bool = False):
+                 sched: SchedulerConfig = None, prefill_batch: int = 1,
+                 decode_backend: str = "", quiet: bool = False):
     """Continuous-batching serve: the thin driver over InferenceEngine."""
     spec = get_arch(arch)
     cfg = reduce_cfg(spec.model) if use_reduced else spec.model
@@ -108,9 +109,11 @@ def serve_engine(arch: str, use_reduced: bool, n_slots: int, prompt_len: int,
     sched = sched or SchedulerConfig(
         n_slots=n_slots, cache_len=cache_len,
         min_prompt_bucket=min(16, max(prompt_len // 4, 1)),
-        round_multiple=max(prompt_len // 4, 8))
+        round_multiple=max(prompt_len // 4, 8),
+        prefill_batch=prefill_batch)
     engine = InferenceEngine.from_arch(arch, use_reduced=use_reduced,
-                                       seed=seed, cfg=sched)
+                                       seed=seed, cfg=sched,
+                                       decode_backend=decode_backend or None)
     reqs = make_requests(cfg, n_requests, prompt_len, gen_tokens, seed=seed,
                          ragged=ragged, sampling=sampling)
     t0 = time.time()
@@ -151,6 +154,13 @@ def main(argv=None) -> int:
                    help="engine: number of requests (0 = --batch)")
     p.add_argument("--uniform", action="store_true",
                    help="engine: identical prompt/gen lengths per request")
+    p.add_argument("--prefill-batch", type=int, default=1,
+                   help="engine: admit up to k same-bucket requests as one "
+                        "(k, bucket) prefill call")
+    p.add_argument("--decode-backend", default="",
+                   choices=["", "reference", "kernel", "kernel_interpret"],
+                   help="engine: override ModelConfig.decode_backend "
+                        "(default: the arch preset's value)")
     p.add_argument("--temperature", type=float, default=0.0)
     p.add_argument("--top-k", type=int, default=0)
     p.add_argument("--top-p", type=float, default=1.0)
@@ -165,7 +175,9 @@ def main(argv=None) -> int:
         serve_engine(args.arch, args.reduced, args.batch, args.prompt_len,
                      args.gen, n_requests=args.requests,
                      cache_len=args.cache_len, seed=args.seed,
-                     ragged=not args.uniform, sampling=sp)
+                     ragged=not args.uniform, sampling=sp,
+                     prefill_batch=args.prefill_batch,
+                     decode_backend=args.decode_backend)
     return 0
 
 

@@ -21,8 +21,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.kernels import on_tpu
+from repro.kernels import on_tpu, resolve_backend
 from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_decode.ops import flash_decode
 from repro.models.layers import ParamDef, apply_rope, rms_norm
 
 NEG_INF = -1e30
@@ -77,9 +78,19 @@ def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     sk, kvh = k.shape[1], k.shape[2]
     g = h // kvh
     scale = 1.0 / math.sqrt(d)
+    # odd bucket/remainder lengths (e.g. sk=544 against the default 512)
+    # used to trip the divisibility assert.  Prefer the largest divisor of
+    # sk within (block_kv/2, block_kv] — an exact scan with bounded waste;
+    # when none exists (e.g. prime sk) pad the tail and mask the dead keys
+    # rather than degenerating toward block_kv=1 (trace-time, sk is static)
     block_kv = min(block_kv, sk)
-    n_blocks = sk // block_kv
-    assert sk % block_kv == 0, (sk, block_kv)
+    block_kv = next((c for c in range(block_kv, block_kv // 2, -1)
+                     if sk % c == 0), block_kv)
+    pad = (-sk) % block_kv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_blocks = (sk + pad) // block_kv
 
     qg = q.reshape(b, sq, kvh, g, d) * scale
     kb = k.reshape(b, n_blocks, block_kv, kvh, d)
@@ -90,10 +101,15 @@ def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         m, l, acc = carry
         kc, vc, blk = inp  # (B, blk, KV, D), (B, blk, KV, D), ()
         s = jnp.einsum("bqkgd,bjkd->bkgqj", qg, kc).astype(jnp.float32)
+        k_pos = blk * block_kv + jnp.arange(block_kv)
         if causal:
-            k_pos = blk * block_kv + jnp.arange(block_kv)
             mask = q_pos[:, None] >= k_pos[None, :]  # (Sq, blk)
+            if pad:
+                mask &= (k_pos < sk)[None, :]
             s = jnp.where(mask[None, None, None], s, NEG_INF)
+        elif pad:
+            s = jnp.where((k_pos < sk)[None, None, None, None, :], s,
+                          NEG_INF)
         m_new = jnp.maximum(m, s.max(axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
@@ -160,6 +176,21 @@ def decode_attention(params: Dict[str, jax.Array], x: jax.Array,
     ``pos`` is a scalar (whole batch at one position — the legacy static
     path) or a per-row (B,) vector (continuous batching: every slot decodes
     at its own depth).  Returns (out, new_cache_k, new_cache_v).
+
+    Mask convention — **count of valid entries**: after this step's k/v
+    write, a row decoding at position ``p`` has ``p + 1`` valid cache
+    entries (indices ``0..p`` inclusive of the token just written) and
+    cache row ``j`` attends iff ``j < p + 1``.  This is the same convention
+    ``distributed.collectives.flash_decode_sharded`` and the flash-decode
+    kernel use (``lengths`` = counts), pinned by the parity tests in
+    tests/test_flash_decode.py.
+
+    ``cfg.decode_backend`` selects the context computation: "reference"
+    (jnp masked softmax over the full cache — the oracle), "kernel" (the
+    Pallas split-KV flash-decode kernel on TPU, reference elsewhere) or
+    "kernel_interpret" (kernel in interpret mode — CPU validation).  The
+    kernel serves the single-token step on both the scalar-pos and
+    per-slot-pos paths; multi-token calls stay on the reference path.
     """
     b, s_q, h, = x.shape[0], x.shape[1], cfg.n_heads
     pos = jnp.asarray(pos)
@@ -188,18 +219,28 @@ def decode_attention(params: Dict[str, jax.Array], x: jax.Array,
     kvh = cfg.n_kv_heads
     g = h // kvh
     d = cfg.resolved_head_dim
-    scale = 1.0 / math.sqrt(d)
-    qg = q.reshape(b, s_q, kvh, g, d) * scale
-    s = jnp.einsum("bqkgd,bjkd->bkgqj", qg, cache_k).astype(jnp.float32)
-    if per_slot:
-        valid = (jnp.arange(s_max)[None, None, :]
-                 <= positions[:, :, None])  # (B, s_q, S)
-        s = jnp.where(valid[:, None, None], s, NEG_INF)
+    use_kernel, interpret = resolve_backend(cfg.decode_backend,
+                                            "decode_backend")
+    if use_kernel and s_q == 1:
+        # counts of valid entries per row (the token just written included)
+        lengths = (pos + 1 if per_slot
+                   else jnp.broadcast_to(pos + 1, (b,))).astype(jnp.int32)
+        ctx = flash_decode(q[:, 0], cache_k, cache_v, lengths,
+                           interpret=interpret)[:, None]
     else:
-        valid = jnp.arange(s_max)[None, :] <= (pos + jnp.arange(s_q))[:, None]
-        s = jnp.where(valid[None, None, None], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    ctx = jnp.einsum("bkgqj,bjkd->bkgqd", p.astype(cache_v.dtype), cache_v)
-    ctx = ctx.transpose(0, 3, 1, 2, 4).reshape(b, s_q, h, d)
+        scale = 1.0 / math.sqrt(d)
+        qg = q.reshape(b, s_q, kvh, g, d) * scale
+        s = jnp.einsum("bqkgd,bjkd->bkgqj", qg, cache_k).astype(jnp.float32)
+        counts = positions + 1  # (B, s_q) or (1, s_q): valid-entry counts
+        if per_slot:
+            valid = jnp.arange(s_max)[None, None, :] < counts[:, :, None]
+            s = jnp.where(valid[:, None, None], s, NEG_INF)
+        else:
+            valid = jnp.arange(s_max)[None, :] < counts[0][:, None]
+            s = jnp.where(valid[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bkgqj,bjkd->bkgqd", p.astype(cache_v.dtype),
+                         cache_v)
+        ctx = ctx.transpose(0, 3, 1, 2, 4).reshape(b, s_q, h, d)
     out = jnp.einsum("bshk,hkd->bsd", ctx, params["wo"].astype(x.dtype))
     return out, cache_k, cache_v

@@ -4,7 +4,9 @@ One engine serves every backbone family through the same three jitted
 executables:
 
 * per-bucket **prefill** (shape-keyed jit cache, bounded by the prompt
-  ladder) + an exact decode replay of the sub-bucket remainder,
+  ladder; up to ``SchedulerConfig.prefill_batch`` same-bucket requests
+  stack into one ``(k, bucket)`` call) + an exact decode replay of each
+  request's sub-bucket remainder,
 * slot **insert/evict** surgery on the donated state buffer,
 * one **fused decode step** for all slots at once (per-slot positions,
   per-slot sampling parameters, per-slot stopping).
@@ -105,48 +107,77 @@ class InferenceEngine:
     # -- construction helpers ----------------------------------------------
     @classmethod
     def from_arch(cls, arch: str, use_reduced: bool = True, seed: int = 0,
-                  cfg: Optional[SchedulerConfig] = None, **kw
+                  cfg: Optional[SchedulerConfig] = None,
+                  decode_backend: Optional[str] = None, **kw
                   ) -> "InferenceEngine":
         from repro.configs import get_arch, reduced as reduce_cfg
         spec = get_arch(arch)
         mcfg = reduce_cfg(spec.model) if use_reduced else spec.model
+        if decode_backend:
+            mcfg = mcfg.replace(decode_backend=decode_backend)
         model = model_zoo.build_model(mcfg, dtype=jnp.float32, remat="none")
         params = model_zoo.init_params(jax.random.PRNGKey(seed), mcfg)
         return cls(model, params, cfg=cfg, **kw)
 
-    # -- admission: bucketed prefill + exact remainder replay ---------------
-    def _admit(self, slot: int, req: Request,
-               on_token: Optional[OnToken]) -> None:
-        t0 = time.time()
-        split = prefill_split(req.prompt_len, self.scheduler.ladder)
-        toks = jnp.asarray(req.tokens, jnp.int32)[None, :]
-        logits, one = self._prefill(self.params, {"tokens": toks[:, :split]})
-        for i in range(split, req.prompt_len):
-            logits, one = self.state.decode(self.params, one,
-                                            toks[:, i:i + 1])
+    # -- admission: bucketed (k, bucket) prefill + exact remainder replay ---
+    def _first_token(self, req: Request, logits: jax.Array) -> int:
+        """Sample the admission token from one request's (1, V) logits."""
         sp = req.sampling
         if sp.temperature <= 0.0:
-            first = int(self._greedy(logits)[0])
+            return int(self._greedy(logits)[0])
+        key = sampling.step_key(
+            sampling.request_key(sp.seed, req.uid), 0)[None]
+        return int(self._sample(
+            logits, key,
+            jnp.full((1,), sp.temperature, jnp.float32),
+            jnp.full((1,), sp.top_k, jnp.int32),
+            jnp.full((1,), sp.top_p, jnp.float32))[0])
+
+    def _admit_batch(self, admissions, on_token: Optional[OnToken]) -> None:
+        """Admit same-split requests as one ``(k, bucket)`` prefill call.
+
+        The scheduler guarantees every request in ``admissions`` shares a
+        prefill split, so their bucket prefixes stack into one jitted
+        prefill (shape set bounded by (ladder U {1}) x prefill_batch).
+        Ragged sub-bucket remainders then decode-replay per request on the
+        sliced row cache — exact for every backbone — and the rows land in
+        their slots through one multi-row ``insert_many``.  Per-request
+        ``prefill_s`` reports the batch wall time amortized over k.
+        """
+        t0 = time.time()
+        reqs = [r for _, r in admissions]
+        split = prefill_split(reqs[0].prompt_len, self.scheduler.ladder)
+        toks = jnp.asarray([r.tokens[:split] for r in reqs], jnp.int32)
+        logits, kcache = self._prefill(self.params, {"tokens": toks})
+        row_logits = [logits[i:i + 1] for i in range(len(reqs))]
+        if any(r.prompt_len > split for r in reqs):
+            rows = [self.state.row(kcache, i) for i in range(len(reqs))]
+            for i, r in enumerate(reqs):
+                full = jnp.asarray(r.tokens, jnp.int32)[None, :]
+                for j in range(split, r.prompt_len):
+                    row_logits[i], rows[i] = self.state.decode(
+                        self.params, rows[i], full[:, j:j + 1])
+            stacked = self.state.stack_rows(rows)
         else:
-            key = sampling.step_key(
-                sampling.request_key(sp.seed, req.uid), 0)[None]
-            first = int(self._sample(
-                logits, key,
-                jnp.full((1,), sp.temperature, jnp.float32),
-                jnp.full((1,), sp.top_k, jnp.int32),
-                jnp.full((1,), sp.top_p, jnp.float32))[0])
-        self.cache = self.state.insert(self.cache, slot, one)
+            stacked = kcache
+        self.cache = self.state.insert_many(
+            self.cache, np.asarray([s for s, _ in admissions], np.int32),
+            stacked)
+        firsts = [self._first_token(r, row_logits[i])
+                  for i, r in enumerate(reqs)]
         dt = time.time() - t0
         self.stats.prefill_s += dt
-        self.stats.prefill_tokens += req.prompt_len
-        self.stats.admitted += 1
-        self.stats.generated_tokens += 1
-        st = self.scheduler.activate(slot, req, first, dt)
-        if on_token:
-            on_token(req.uid, first)
-        reason = self.scheduler.stop_reason(st)
-        if reason:
-            self._retire(slot, reason)
+        self.stats.prefill_tokens += sum(r.prompt_len for r in reqs)
+        self.stats.admitted += len(reqs)
+        self.stats.generated_tokens += len(reqs)
+        for (slot, req), first in zip(admissions, firsts):
+            st = self.scheduler.activate(slot, req, first,
+                                         dt / len(admissions))
+            if on_token:
+                on_token(req.uid, first)
+            reason = self.scheduler.stop_reason(st)
+            if reason:
+                self._retire(slot, reason)
 
     def _retire(self, slot: int, reason: str) -> GenerationResult:
         self.cache = self.state.evict(self.cache, slot)
@@ -214,10 +245,10 @@ class InferenceEngine:
         self.scheduler.submit_all(requests)
         while self.scheduler.busy:
             while True:
-                adm = self.scheduler.next_admission()
-                if adm is None:
+                adm = self.scheduler.next_admission(self.cfg.prefill_batch)
+                if not adm:
                     break
-                self._admit(*adm, on_token)
+                self._admit_batch(adm, on_token)
             if self.scheduler.active:
                 self._fused_step(on_token)
         done, self.scheduler.finished = self.scheduler.finished, []

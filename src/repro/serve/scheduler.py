@@ -9,12 +9,17 @@ exact for every backbone (no padding, no masked prefill).  The paper's
 observation that sequence-length heterogeneity dominates cost applies
 unchanged at serving time: ragged prompts land on a bounded shape set, and
 ragged generation lengths are absorbed by per-slot eviction + backfill.
+
+Batched prefill (``SchedulerConfig.prefill_batch``): admission can pop up
+to ``k`` pending requests that share a prefill split and hand them to the
+engine as one ``(k, bucket)`` prefill call — sub-bucket remainders still
+decode-replay per request, so parity with sequential admission is exact.
 """
 from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Tuple
 
 import numpy as np
 
@@ -33,8 +38,14 @@ class SchedulerConfig:
     cache_len:    per-slot KV/state capacity; every request must satisfy
                   prompt_len + max_tokens <= cache_len
     prompt ladder (min_prompt_bucket / round_multiple / max_buckets): feeds
-                  core.pacing.bucket_ladder — at most max_buckets distinct
-                  prefill shapes ever compile.
+                  core.pacing.bucket_ladder — at most max_buckets + 1
+                  distinct single-request prefill shapes ever compile (the
+                  ladder plus the length-1 shape sub-bucket prompts use).
+    prefill_batch: max same-bucket requests admitted as one (k, bucket)
+                  prefill call (1 = sequential admission, the legacy
+                  behavior; >1 amortizes weight reads across prompts and
+                  multiplies the prefill shape set by at most
+                  prefill_batch).
     """
 
     n_slots: int = 8
@@ -42,6 +53,7 @@ class SchedulerConfig:
     min_prompt_bucket: int = 16
     round_multiple: int = 32
     max_buckets: int = 8
+    prefill_batch: int = 1
 
     def ladder(self) -> Tuple[int, ...]:
         slw = SLWConfig(enabled=True, start_seq_len=self.min_prompt_bucket,
@@ -54,10 +66,16 @@ class SchedulerConfig:
 def prefill_split(prompt_len: int, ladder: Tuple[int, ...]) -> int:
     """Tokens to prefill at a bucketed shape; the rest replays via decode.
 
-    Round-*down* quantization (paper semantics, ``pacing.quantize``);
-    prompts shorter than the smallest bucket prefill at their exact length.
+    Round-*down* quantization (paper semantics, ``pacing.quantize``).
+    Prompts shorter than the smallest bucket prefill a single token and
+    decode-replay the rest: N distinct short lengths share the one
+    length-1 prefill executable, so the compiled shape set stays
+    ``ladder U {1}`` (the bounded-jit-shape guarantee above — exact-length
+    prefills used to leak one executable per distinct short length).
     """
-    return min(quantize(prompt_len, ladder), prompt_len)
+    if prompt_len < ladder[0]:
+        return 1
+    return quantize(prompt_len, ladder)
 
 
 @dataclass
@@ -117,17 +135,40 @@ class Scheduler:
     def submit_all(self, requests) -> None:
         """All-or-nothing admission: a validation failure anywhere in the
         batch enqueues nothing (a half-submitted batch would leak orphan
-        pending requests into the caller's next drain)."""
+        pending requests into the caller's next drain).  ``requests`` is
+        materialized once up front — a generator used to be exhausted by
+        the validation pass, silently enqueueing nothing."""
+        requests = list(requests)
         uids = self._in_flight_uids()
         for r in requests:
             self._validate(r, uids)
         self.pending.extend(requests)
 
-    def next_admission(self) -> Optional[Tuple[int, Request]]:
-        """Pop (free slot, pending request) or None."""
+    def next_admission(self, k: int = 1) -> List[Tuple[int, Request]]:
+        """Pop up to ``k`` same-split (free slot, request) pairs; [] if no
+        slot or no request is available.
+
+        The queue head fixes the prefill split; later pending requests
+        with the same split are pulled forward to fill the batch (Lau et
+        al.-style batch composition: same-shape prompts amortize one
+        ``(k, bucket)`` prefill), skipped requests keep their relative
+        order.
+        """
         if not self.pending or not self.free:
-            return None
-        return self.free.pop(), self.pending.popleft()
+            return []
+        head = self.pending.popleft()
+        out = [(self.free.pop(), head)]
+        if k > 1:
+            split = prefill_split(head.prompt_len, self.ladder)
+            skipped: List[Request] = []
+            while self.pending and self.free and len(out) < k:
+                r = self.pending.popleft()
+                if prefill_split(r.prompt_len, self.ladder) == split:
+                    out.append((self.free.pop(), r))
+                else:
+                    skipped.append(r)
+            self.pending.extendleft(reversed(skipped))
+        return out
 
     def activate(self, slot: int, request: Request,
                  first_token: int, prefill_s: float) -> ActiveSlot:

@@ -28,6 +28,10 @@ class DecodeState(Protocol):
     def insert(self, cache: Any, slot: jax.Array, prefill_cache: Any) -> Any:
         """Scatter one request's batch=1 prefill cache into ``slot``."""
 
+    def insert_many(self, cache: Any, slots: jax.Array,
+                    prefill_cache: Any) -> Any:
+        """Scatter a batch=k prefill cache into the ``k`` ``slots``."""
+
     def evict(self, cache: Any, slot: jax.Array) -> Any:
         """Retire ``slot`` (resets its position bookkeeping)."""
 
@@ -66,6 +70,22 @@ class SlotDecodeState:
                     c, jnp.asarray(p)[None].astype(c.dtype), slot, axis=0)
             return _tree_map_axes(leaf, self._axes, cache, one)
 
+        def insert_many_fn(cache, slots, rows):
+            k = slots.shape[0]
+
+            def leaf(ax, c, p):
+                if "batch" in ax:
+                    bax = ax.index("batch")
+                    cm = jnp.moveaxis(c, bax, 0)
+                    pm = jnp.moveaxis(p, bax, 0).astype(c.dtype)
+                    return jnp.moveaxis(cm.at[slots].set(pm), 0, bax)
+                # promoted bookkeeping leaf: scalar (shared) or (k,) per-row
+                p = jnp.asarray(p).astype(c.dtype)
+                if p.ndim < c.ndim:
+                    p = jnp.broadcast_to(p, (k,) + c.shape[1:])
+                return c.at[slots].set(p)
+            return _tree_map_axes(leaf, self._axes, cache, rows)
+
         def evict_fn(cache, slot):
             def leaf(ax, c):
                 if "batch" in ax:
@@ -74,6 +94,14 @@ class SlotDecodeState:
                 return jax.lax.dynamic_update_slice_in_dim(c, zero, slot,
                                                            axis=0)
             return _tree_map_axes(leaf, self._axes, cache)
+
+        def row_fn(kcache, i):
+            def leaf(ax, c):
+                if "batch" in ax:
+                    return jax.lax.dynamic_slice_in_dim(
+                        c, i, 1, axis=ax.index("batch"))
+                return c  # scalar bookkeeping (pos) is shared by all rows
+            return _tree_map_axes(leaf, self._axes, kcache)
 
         def gather_fn(cache, slot):
             def leaf(ax, c):
@@ -84,8 +112,10 @@ class SlotDecodeState:
             return _tree_map_axes(leaf, self._axes, cache)
 
         self._insert = jax.jit(insert_fn, donate_argnums=(0,))
+        self._insert_many = jax.jit(insert_many_fn, donate_argnums=(0,))
         self._evict = jax.jit(evict_fn, donate_argnums=(0,))
         self._gather = jax.jit(gather_fn)
+        self._row = jax.jit(row_fn)
         self._decode = jax.jit(model.decode, donate_argnums=(1,))
 
     # -- protocol ----------------------------------------------------------
@@ -96,6 +126,15 @@ class SlotDecodeState:
         return self._insert(cache, jnp.asarray(slot, jnp.int32),
                             prefill_cache)
 
+    def insert_many(self, cache, slots, prefill_cache):
+        """Scatter a batch=k prefill cache into ``slots`` ((k,) int32, all
+        distinct) in one donated executable (keyed on k, bounded by
+        n_slots).  Bookkeeping leaves may be scalar (shared across the
+        batch — the fresh same-bucket prefill) or (k,) per-row (after
+        ragged decode-replay, see ``stack_rows``)."""
+        return self._insert_many(cache, jnp.asarray(slots, jnp.int32),
+                                 prefill_cache)
+
     def evict(self, cache, slot):
         return self._evict(cache, jnp.asarray(slot, jnp.int32))
 
@@ -104,6 +143,22 @@ class SlotDecodeState:
 
     def decode(self, params, cache, tokens):
         return self._decode(params, cache, tokens)
+
+    # -- batched-prefill helpers -------------------------------------------
+    def row(self, prefill_cache, i) -> Any:
+        """Slice row ``i`` of a batch=k prefill cache as a batch=1 cache
+        (for per-request decode-replay of a ragged remainder)."""
+        return self._row(prefill_cache, jnp.asarray(i, jnp.int32))
+
+    def stack_rows(self, rows) -> Any:
+        """Concatenate batch=1 prefill caches into a batch=k cache for
+        ``insert_many``; scalar bookkeeping leaves (``pos``) become (k,)
+        per-row vectors (rows end ragged replay at different depths)."""
+        def leaf(ax, *cs):
+            if "batch" in ax:
+                return jnp.concatenate(cs, axis=ax.index("batch"))
+            return jnp.stack([jnp.asarray(c) for c in cs])
+        return _tree_map_axes(leaf, self._axes, *rows)
 
     # -- placement ---------------------------------------------------------
     def shardings(self, rules, n_slots: int, cache_len: int):

@@ -76,8 +76,9 @@ def test_serve_slot_state_shardings():
     assert "SLOT_SHARD_OK" in out
 
 
-def test_flash_decode_sharded_matches_reference():
-    out = _run("""
+@pytest.mark.parametrize("backend", ["reference", "kernel_interpret"])
+def test_flash_decode_sharded_matches_reference(backend):
+    out = _run(f"""
         import jax, jax.numpy as jnp, numpy as np
         from repro.distributed.collectives import (flash_decode_sharded,
                                                    reference_decode)
@@ -88,8 +89,9 @@ def test_flash_decode_sharded_matches_reference():
         q = jax.random.normal(ks[0], (b, 1, h, d))
         k = jax.random.normal(ks[1], (b, s, kv, d))
         v = jax.random.normal(ks[2], (b, s, kv, d))
-        pos = jnp.int32(41)  # partial cache
-        fn = flash_decode_sharded(mesh, "data")
+        pos = jnp.int32(41)  # partial cache: some shards full, one ragged,
+                             # some empty — the per-shard masking sweep
+        fn = flash_decode_sharded(mesh, "data", backend="{backend}")
         out = jax.jit(fn)(q, k, v, pos)
         ref = reference_decode(q, k, v, pos)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),

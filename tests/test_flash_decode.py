@@ -1,0 +1,216 @@
+"""Flash-decode kernel contracts.
+
+* interpret-mode kernel vs the jnp decode oracle across per-slot ragged
+  lengths, GQA group sizes (MQA/GQA/MHA) and uneven cache tails;
+* partial-softmax (o, m, l) parity — the triple the sharded flash-decoding
+  merge consumes — plus a host-side shard merge of kernel partials against
+  the full-cache reference;
+* ``decode_attention`` backend dispatch: kernel vs reference on both the
+  per-slot-pos (engine) and scalar-pos (legacy) paths;
+* the one shared masking convention ("pos = count of valid entries")
+  across ``decode_attention``, ``reference_decode`` and the kernel — the
+  parity test that would have caught a one-token-stale cache read.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.distributed.collectives import reference_decode
+from repro.kernels.flash_decode.ops import flash_decode, flash_decode_partials
+from repro.kernels.flash_decode.ref import (decode_attention_reference,
+                                            decode_partials_reference)
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# kernel vs jnp oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,kv,d,block_k", [
+    (3, 128, 4, 2, 32, 64),    # GQA, two kv blocks
+    (2, 96, 8, 8, 16, 32),     # MHA, three blocks
+    (4, 80, 4, 1, 64, 32),     # MQA, uneven tail (80 % 32 != 0 -> padded)
+    (1, 48, 6, 3, 16, 128),    # block_k > S clamps to one block
+    (2, 200, 2, 2, 8, 64),     # uneven tail + tiny heads
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_matches_reference(b, s, h, kv, d, block_k, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(s + h), 4)
+    q = jax.random.normal(ks[0], (b, h, d)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, d)).astype(dtype)
+    # ragged per-slot lengths including the 1 and S endpoints
+    lengths = jnp.asarray(
+        np.concatenate([[1, s], np.random.default_rng(0).integers(
+            1, s + 1, size=max(b - 2, 0))])[:b], jnp.int32)
+    out = flash_decode(q, k, v, lengths, block_k=block_k, interpret=True)
+    ref = decode_attention_reference(q.astype(jnp.float32),
+                                     k.astype(jnp.float32),
+                                     v.astype(jnp.float32), lengths)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_decode_partials_match_reference():
+    """(o, m, l) — the merge currency of flash_decode_sharded — agree
+    between kernel and oracle under multi-block accumulation."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    b, s, h, kv, d = 3, 96, 4, 2, 16
+    q = jax.random.normal(ks[0], (b, h, d))
+    k = jax.random.normal(ks[1], (b, s, kv, d))
+    v = jax.random.normal(ks[2], (b, s, kv, d))
+    lengths = jnp.asarray([7, 96, 33], jnp.int32)
+    got = flash_decode_partials(q, k, v, lengths, block_k=32, interpret=True)
+    want = decode_partials_reference(q, k, v, lengths)
+    for name, a, r in zip(("o", "m", "l"), got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r), atol=1e-5,
+                                   rtol=1e-5, err_msg=name)
+
+
+def test_flash_decode_zero_length_slot_is_inert():
+    """A retired/empty slot (lengths == 0) yields exactly-zero context and
+    (m, l) = (NEG_INF, 0) partials that drop out of a shard merge."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (2, 4, 16))
+    k = jax.random.normal(ks[1], (2, 32, 2, 16))
+    v = jax.random.normal(ks[2], (2, 32, 2, 16))
+    lengths = jnp.asarray([0, 9], jnp.int32)
+    o, m, l = flash_decode_partials(q, k, v, lengths, block_k=16,
+                                    interpret=True)
+    assert float(jnp.abs(o[0]).max()) == 0.0
+    assert float(l[0].max()) == 0.0
+    assert float(m[0].max()) < -1e29
+    out = flash_decode(q, k, v, lengths, block_k=16, interpret=True)
+    assert float(jnp.abs(out[0]).max()) == 0.0
+
+
+def test_sharded_merge_consumes_kernel_partials():
+    """Host-side replay of the flash_decode_sharded merge over kernel
+    partials (one per sequence shard) reproduces the full-cache reference
+    — the unified masking semantics the ISSUE asks for."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    b, s, h, kv, d, n_shards = 2, 128, 4, 2, 16, 4
+    q = jax.random.normal(ks[0], (b, h, d))
+    k = jax.random.normal(ks[1], (b, s, kv, d))
+    v = jax.random.normal(ks[2], (b, s, kv, d))
+    pos = 71  # count of valid entries: shards 0-1 full, 2 ragged, 3 empty
+    s_loc = s // n_shards
+    parts = []
+    for i in range(n_shards):
+        lengths = jnp.full((b,), np.clip(pos - i * s_loc, 0, s_loc),
+                           jnp.int32)
+        parts.append(flash_decode_partials(
+            q, k[:, i * s_loc:(i + 1) * s_loc], v[:, i * s_loc:(i + 1) * s_loc],
+            lengths, block_k=16, interpret=True))
+    gm = jnp.stack([m for _, m, _ in parts]).max(axis=0)
+    l_tot = sum(l * jnp.exp(m - gm) for _, m, l in parts)
+    o_tot = sum(o * jnp.exp(m - gm)[..., None] for o, m, _ in parts)
+    merged = (o_tot / jnp.maximum(l_tot[..., None], 1e-30)).reshape(b, h, d)
+    ref = reference_decode(q[:, None], k, v, jnp.int32(pos))[:, 0]
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention backend dispatch + the shared mask convention
+# ---------------------------------------------------------------------------
+
+CFG = ModelConfig(name="t", family="dense", n_layers=1, d_model=32,
+                  n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64, head_dim=8)
+
+
+def _attn_params(cfg, seed=0):
+    return L.init_params(jax.random.PRNGKey(seed),
+                         attn_mod.attention_def(cfg))
+
+
+@pytest.mark.parametrize("per_slot", [True, False])
+def test_decode_attention_kernel_backend_matches_reference(per_slot):
+    b, s_max = 3, 48
+    params = _attn_params(CFG)
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    x = jax.random.normal(ks[0], (b, 1, CFG.d_model))
+    # garbage beyond each row's depth must stay masked on both backends
+    cache_k = jax.random.normal(ks[1], (b, s_max, 2, 8))
+    cache_v = jax.random.normal(ks[2], (b, s_max, 2, 8))
+    pos = jnp.asarray([0, 11, 40], jnp.int32) if per_slot else jnp.int32(11)
+    outs = {}
+    for backend in ("reference", "kernel_interpret"):
+        cfg = CFG.replace(decode_backend=backend)
+        outs[backend] = attn_mod.decode_attention(params, x, cfg, cache_k,
+                                                  cache_v, pos)
+    for a, r in zip(outs["kernel_interpret"], outs["reference"]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r), atol=1e-5,
+                                   rtol=1e-5)
+
+
+def test_decode_mask_convention_counts_the_written_token():
+    """One convention everywhere: pos = count of valid entries.  The token
+    written by the decode step itself is entry ``pos`` of the cache and
+    must be attended (arange < pos + 1); a stale convention (arange < pos)
+    reads the cache one token behind and shifts the output."""
+    b, s_max, p = 2, 32, 9
+    params = _attn_params(CFG)
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    x = jax.random.normal(ks[0], (b, 1, CFG.d_model))
+    cache_k = jnp.zeros((b, s_max, 2, 8))
+    cache_v = jnp.zeros((b, s_max, 2, 8))
+    prefix = jax.random.normal(ks[1], (b, p, 2, 8))
+    cache_k = cache_k.at[:, :p].set(prefix)
+    cache_v = cache_v.at[:, :p].set(
+        jax.random.normal(ks[2], (b, p, 2, 8)))
+    pos = jnp.full((b,), p, jnp.int32)  # rows decode at position p
+    out, new_k, new_v = attn_mod.decode_attention(params, x, CFG, cache_k,
+                                                  cache_v, pos)
+    # oracle: reference_decode over the *updated* cache with count = p + 1
+    q, _, _ = attn_mod._project_qkv(params, x, CFG, pos[:, None])
+    ctx = reference_decode(q, new_k, new_v, pos + 1)
+    want = jnp.einsum("bshk,hkd->bsd", ctx, params["wo"])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5,
+                               rtol=1e-5)
+    # the stale count (p) excludes the just-written token -> different out
+    stale_ctx = reference_decode(q, new_k, new_v, pos)
+    stale = jnp.einsum("bshk,hkd->bsd", stale_ctx, params["wo"])
+    assert float(jnp.abs(np.asarray(out) - np.asarray(stale)).max()) > 1e-4
+    # and the new entries really are this step's k/v at row p
+    _, k_new, v_new = attn_mod._project_qkv(params, x, CFG, pos[:, None])
+    np.testing.assert_allclose(np.asarray(new_k[:, p]), np.asarray(k_new[:, 0]),
+                               atol=1e-6, rtol=1e-6)
+
+
+@pytest.mark.parametrize("s,block_kv,causal", [
+    (544, 512, True),    # divisor path: 272 divides 544 (used to assert)
+    (149, 64, True),     # prime length: pad + dead-key masking
+    (149, 64, False),    # non-causal padding needs the explicit key mask
+    (96, 512, True),     # block_kv > sk clamps
+])
+def test_blockwise_attention_non_divisible_block_kv(s, block_kv, causal):
+    """Lengths that don't divide block_kv (odd buckets, primes) must scan
+    exactly — largest in-range divisor or pad+mask — and match full
+    softmax."""
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    b, h, kv, d = 1, 4, 2, 16
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, kv, d))
+    v = jax.random.normal(ks[2], (b, s, kv, d))
+    out = attn_mod.blockwise_attention(q, k, v, causal=causal,
+                                       block_kv=block_kv)
+    # dense reference
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, d) / math.sqrt(d)
+    sc = jnp.einsum("bqkgd,bjkd->bkgqj", qg, k)
+    if causal:
+        mask = jnp.arange(s)[:, None] >= jnp.arange(s)[None, :]
+        sc = jnp.where(mask[None, None, None], sc, -1e30)
+    pr = jax.nn.softmax(sc, axis=-1)
+    ref = jnp.einsum("bkgqj,bjkd->bkgqd", pr, v)
+    ref = ref.transpose(0, 3, 1, 2, 4).reshape(b, s, h, d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=2e-5)

@@ -240,7 +240,119 @@ def test_scheduler_validation_and_buckets():
     for plen in (3, 8, 9, 17, 31, 32):
         sp = prefill_split(plen, ladder)
         assert 1 <= sp <= plen
-        assert sp == plen or sp in ladder
+        # bounded jit shapes: a split is a ladder bucket or the shared
+        # length-1 shape sub-bucket prompts prefill at
+        assert sp in ladder or sp == 1
+
+
+def test_submit_all_accepts_generator():
+    """Regression: submit_all used to exhaust a generator during the
+    validation pass and then extend an empty iterator — silently enqueueing
+    nothing."""
+    sched = SchedulerConfig(n_slots=2, cache_len=32, min_prompt_bucket=8,
+                            round_multiple=16, max_buckets=4)
+    s = Scheduler(sched)
+    reqs = [Request(uid=i, tokens=(1, 2, 3), max_tokens=4) for i in range(5)]
+    s.submit_all(r for r in reqs)
+    assert len(s.pending) == 5
+    assert [r.uid for r in s.pending] == [0, 1, 2, 3, 4]
+    # all-or-nothing still holds for generators
+    with pytest.raises(ValueError):
+        s.submit_all(Request(uid=u, tokens=(1,) * 40, max_tokens=4)
+                     for u in (7, 8))
+    assert len(s.pending) == 5
+
+
+def test_short_prompts_share_one_prefill_shape():
+    """Sub-minimum-bucket prompts must not leak one compiled prefill shape
+    per distinct length: they prefill the shared length-1 shape and
+    decode-replay the rest (and stay tokenwise exact)."""
+    cfg, model, params = _build("gpt2-117m")
+    sched = SchedulerConfig(n_slots=2, cache_len=32, min_prompt_bucket=8,
+                            round_multiple=16, max_buckets=4)
+    engine = InferenceEngine(model, params, sched)
+    shapes = set()
+    orig = engine._prefill
+    engine._prefill = lambda p, b: (shapes.add(b["tokens"].shape),
+                                    orig(p, b))[1]
+    rng = np.random.default_rng(11)
+    reqs = [Request(uid=i,
+                    tokens=tuple(int(t) for t in
+                                 rng.integers(0, cfg.vocab_size, size=plen)),
+                    max_tokens=3)
+            for i, plen in enumerate((2, 3, 4, 5, 6, 7))]
+    results = engine.run(reqs)
+    assert shapes == {(1, 1)}, shapes
+    for req, res in zip(reqs, results):
+        assert res.tokens == _legacy_greedy(model, params, req.tokens,
+                                            req.max_tokens, 32)
+
+
+def test_batched_prefill_matches_sequential():
+    """(k, bucket) admission prefill is tokenwise identical to
+    one-at-a-time admission and genuinely batches same-bucket prompts."""
+    cfg, model, params = _build("gpt2-117m")
+
+    def run(prefill_batch):
+        engine = InferenceEngine(model, params, SchedulerConfig(
+            n_slots=4, cache_len=64, min_prompt_bucket=8, round_multiple=16,
+            max_buckets=4, prefill_batch=prefill_batch))
+        calls = []
+        orig = engine._prefill
+        engine._prefill = lambda p, b: (calls.append(b["tokens"].shape),
+                                        orig(p, b))[1]
+        return engine.run(_mixed_requests(cfg)), calls
+
+    seq_res, seq_calls = run(1)
+    bat_res, bat_calls = run(4)
+    for a, b in zip(seq_res, bat_res):
+        assert a.tokens == b.tokens, a.uid
+        assert a.finish_reason == b.finish_reason
+    assert all(shape[0] == 1 for shape in seq_calls)
+    assert len(bat_calls) < len(seq_calls)  # same-bucket prompts coalesced
+    assert any(shape[0] > 1 for shape in bat_calls)
+
+
+def test_next_admission_same_split_batching():
+    """next_admission(k) pulls same-split requests forward and preserves
+    the relative order of skipped ones."""
+    sched = SchedulerConfig(n_slots=4, cache_len=64, min_prompt_bucket=8,
+                            round_multiple=16, max_buckets=4)
+    s = Scheduler(sched)
+    lens = [16, 9, 17, 20, 33]  # splits on ladder (8, 16, 32): 16,8,16,16,32
+    for i, plen in enumerate(lens):
+        s.submit(Request(uid=i, tokens=(1,) * plen, max_tokens=4))
+    adm = s.next_admission(3)
+    assert [r.uid for _, r in adm] == [0, 2, 3]  # same split as the head
+    assert len({slot for slot, _ in adm}) == 3
+    assert [r.uid for r in s.pending] == [1, 4]  # skipped order preserved
+    adm2 = s.next_admission(3)
+    assert [r.uid for _, r in adm2] == [1]  # next head: different split
+
+
+@pytest.mark.parametrize("arch", ["gpt2-117m"])
+def test_engine_parity_kernel_decode_backend(arch):
+    """Greedy engine output stays tokenwise identical to the legacy path
+    with the flash-decode kernel on the fused step (interpret mode — the
+    CPU validation of the serving hot path's kernel)."""
+    cfg, model, params = _build(arch, decode_backend="kernel_interpret")
+    ref_model = build_model(cfg.replace(decode_backend="reference"),
+                            dtype=jnp.float32, remat="none")
+    sched = SchedulerConfig(n_slots=2, cache_len=32, min_prompt_bucket=8,
+                            round_multiple=16, max_buckets=4,
+                            prefill_batch=2)
+    engine = InferenceEngine(model, params, sched)
+    rng = np.random.default_rng(13)
+    reqs = [Request(uid=i,
+                    tokens=tuple(int(t) for t in
+                                 rng.integers(0, cfg.vocab_size, size=plen)),
+                    max_tokens=mt)
+            for i, (plen, mt) in enumerate(((7, 4), (12, 3), (9, 4)))]
+    results = engine.run(reqs)
+    for req, res in zip(reqs, results):
+        oracle = _legacy_greedy(ref_model, params, req.tokens,
+                                req.max_tokens, 32)
+        assert res.tokens == oracle, f"uid {req.uid}"
 
 
 # ---------------------------------------------------------------------------
