@@ -1,0 +1,145 @@
+"""Chaos arm: the fault-injection matrix against the recovery stack.
+
+Each scenario drives the reduced bench recipe (SLW enabled — the paper's
+stabilizer is part of the system under test) through a deterministic
+injected fault and *gates* on the outcome: the run must complete every
+step, end with a finite loss, and stay within the rollback/restart budget.
+A gate violation raises, so ``benchmarks.run`` records the suite failure
+and exits nonzero — this is the CI chaos lane's pass/fail signal, not just
+a timing table.
+
+Scenarios (all seeded; two runs inject the identical fault):
+
+* ``nan``     — NaN-poisoned parameter mid-run -> in-process rollback
+* ``spike``   — finite loss explosion (params x32) -> rollback on the
+                loss-ratio trigger
+* ``crash``   — InjectedCrash between the checkpoint tmp-write and rename
+                -> process-level supervisor restart from the prior step
+* ``bitflip`` — flipped byte in the newest checkpoint payload -> quarantine
+                + fallback restore on restart
+"""
+from __future__ import annotations
+
+import math
+import shutil
+import tempfile
+import time
+from typing import List
+
+from benchmarks.common import Row, bench_config
+from repro.core.recovery import RecoveryConfig
+from repro.distributed.fault_injection import (FaultInjector, InjectedCrash,
+                                               parse_faults)
+from repro.distributed.fault_tolerance import RetryPolicy, TrainSupervisor
+from repro.launch.train import Trainer, train
+
+ROLLBACK_BUDGET = 3
+
+
+def _gate(name: str, ok: bool, detail: str) -> None:
+    if not ok:
+        raise AssertionError(f"chaos gate failed [{name}]: {detail}")
+
+
+def _check_completed(name: str, res, steps: int) -> None:
+    final = res.loss_history[-1] if res.loss_history else float("nan")
+    _gate(name, res.steps == steps,
+          f"completed {res.steps}/{steps} steps")
+    _gate(name, not res.diverged, f"diverged (events={res.recovery_events})")
+    _gate(name, math.isfinite(final), f"final loss {final}")
+    _gate(name, res.rollbacks <= ROLLBACK_BUDGET,
+          f"{res.rollbacks} rollbacks > budget {ROLLBACK_BUDGET}")
+
+
+def _derived(res, wall_note: str = "") -> str:
+    final = res.loss_history[-1] if res.loss_history else float("nan")
+    return (f"rollbacks={res.rollbacks} faults={len(res.faults_fired)} "
+            f"final_loss={final:.3f} diverged={res.diverged}{wall_note}")
+
+
+def _recovery() -> RecoveryConfig:
+    return RecoveryConfig(policy=RetryPolicy(max_retries=ROLLBACK_BUDGET))
+
+
+def run(quick: bool = False) -> List[Row]:
+    steps = 30 if quick else 60
+    mid = steps // 2
+    rows: List[Row] = []
+
+    # -- in-process rollback scenarios --------------------------------------
+    for key, spec in (("nan", f"nan_grad@{mid}"),
+                      ("spike", f"spike@{mid}:32.0")):
+        inj = FaultInjector(parse_faults(spec), seed=0)
+        t0 = time.time()
+        res = train(bench_config(slw=True, steps=steps), quiet=True,
+                    recovery=_recovery(), fault_injector=inj)
+        wall = time.time() - t0
+        _check_completed(f"chaos/{key}", res, steps)
+        _gate(f"chaos/{key}", res.rollbacks >= 1,
+              f"fault {spec} fired={res.faults_fired} but no rollback")
+        rows.append((f"chaos/{key}", wall / steps * 1e6, _derived(res)))
+
+    # -- crash mid-checkpoint + supervisor restart --------------------------
+    d = tempfile.mkdtemp(prefix="chaos_crash_")
+    try:
+        import dataclasses
+        tc = dataclasses.replace(bench_config(slw=True, steps=steps),
+                                 checkpoint_dir=d, checkpoint_interval=10)
+        # the crash point fires from inside the checkpoint writer, so it
+        # must land on a checkpoint step — the second one, so a valid
+        # step_10 exists for the restart to restore from
+        inj = FaultInjector(parse_faults("crash@20:post_tmp"), seed=0)
+        sup = TrainSupervisor(policy=RetryPolicy(max_retries=2))
+        out = {}
+
+        def run_fn(resume: bool) -> str:
+            out["res"] = train(tc, resume=resume, quiet=True,
+                               recovery=_recovery(), fault_injector=inj)
+            return "ok"
+
+        t0 = time.time()
+        try:
+            sup.run(run_fn)
+        except InjectedCrash as e:  # supervisor budget must absorb it
+            _gate("chaos/crash", False, f"supervisor did not recover: {e}")
+        wall = time.time() - t0
+        res = out["res"]
+        _check_completed("chaos/crash", res, steps)
+        _gate("chaos/crash", sup.restarts == 1,
+              f"{sup.restarts} restarts (want exactly 1)")
+        _gate("chaos/crash", res.restored_from_step is not None,
+              "restart did not restore a checkpoint")
+        rows.append(("chaos/crash", wall / steps * 1e6,
+                     _derived(res, f" restarts={sup.restarts} "
+                                   f"resumed@{res.restored_from_step}")))
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+    # -- checkpoint bitflip + quarantine fallback ---------------------------
+    d = tempfile.mkdtemp(prefix="chaos_bitflip_")
+    try:
+        import dataclasses
+        half = dataclasses.replace(bench_config(slw=True, steps=mid),
+                                   checkpoint_dir=d, checkpoint_interval=10)
+        full = dataclasses.replace(bench_config(slw=True, steps=steps),
+                                   checkpoint_dir=d, checkpoint_interval=10)
+        t0 = time.time()
+        first = train(half, quiet=True)
+        _gate("chaos/bitflip", first.steps == mid,
+              f"seed run stopped at {first.steps}")
+        FaultInjector(seed=0).corrupt_checkpoint(d)  # newest payload
+        tr = Trainer(full, recovery=_recovery())
+        restored = tr.resume()
+        res = tr.run()
+        wall = time.time() - t0
+        _check_completed("chaos/bitflip", res, steps)
+        _gate("chaos/bitflip", len(tr.ckpt.quarantined) == 1,
+              f"quarantined={tr.ckpt.quarantined}")
+        _gate("chaos/bitflip", restored is not None and restored < mid,
+              f"restored from {restored}, want a pre-corruption step")
+        rows.append(("chaos/bitflip", wall / steps * 1e6,
+                     _derived(res, f" quarantined=1 resumed@{restored}")))
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+    return rows

@@ -28,6 +28,7 @@ SUITES = [
     ("kernels", "benchmarks.bench_kernels"),
     ("serve", "benchmarks.bench_serve"),
     ("roofline", "benchmarks.bench_roofline"),
+    ("chaos", "benchmarks.bench_chaos"),
 ]
 
 

@@ -1,7 +1,10 @@
 from repro.checkpoint.checkpoint import (  # noqa: F401
+    CheckpointCorruption,
     CheckpointManager,
+    available_steps,
     latest_step,
     migrate_host_state,
+    quarantine,
     restore,
     save,
 )

@@ -10,11 +10,21 @@ Design goals (the fault-tolerance contract):
   different device count is just a different `shardings` tree at load).
   At fleet scale the same manifest format extends to per-shard files keyed
   by (leaf, shard-index); single-process here, so leaves are whole.
-* **self-validating** — the manifest records shape/dtype per leaf and a
-  payload count; `latest_step` skips incomplete/corrupt directories.
+* **self-validating** — the manifest records shape/dtype *and a crc32
+  content checksum* per leaf plus a payload count; `latest_step` skips
+  incomplete directories and `restore` raises
+  :class:`CheckpointCorruption` on any shape/dtype/checksum mismatch or
+  unreadable payload.  ``CheckpointManager.restore_latest`` turns that into
+  automatic fallback: the corrupt directory is quarantined (renamed
+  ``corrupt.step_*`` so no future restart trusts it, but the payload stays
+  on disk for postmortems) and the previous ``step_*`` directory is tried.
 * **host state included** — curriculum state, loss-ratio tracker, data
   cursor, token counters ride along in the manifest's ``host`` dict, so a
   restart resumes the SLW schedule exactly.
+* **fault-injectable** — the two rename-boundary crash points call into
+  ``repro.distributed.fault_injection`` (no-ops unless a test/chaos run
+  armed an injector), so crash-mid-checkpoint is a tested path, not an
+  assumed one.
 """
 from __future__ import annotations
 
@@ -22,10 +32,18 @@ import json
 import os
 import re
 import shutil
+import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro.distributed.fault_injection import checkpoint_crash_point
+
+
+class CheckpointCorruption(ValueError):
+    """A checkpoint directory failed validation (missing/unreadable payload,
+    shape/dtype mismatch, or content-checksum mismatch)."""
 
 
 def _flatten(tree: Any) -> List[Tuple[str, Any]]:
@@ -62,14 +80,17 @@ def save(directory: str, step: int, tree: Any,
         fname = re.sub(r"[^A-Za-z0-9_.-]", "_", key) + ".npy"
         np.save(os.path.join(tmp, fname), arr)
         manifest["leaves"][key] = {
-            "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+            "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes())}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
         f.flush()
         os.fsync(f.fileno())
+    checkpoint_crash_point("post_tmp", step)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    checkpoint_crash_point("post_rename", step)
     return final
 
 
@@ -89,14 +110,47 @@ def latest_step(directory: str) -> Optional[int]:
     return best
 
 
+def available_steps(directory: str) -> List[int]:
+    """Steps with a complete-looking checkpoint directory, newest first."""
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(directory, name,
+                                             "manifest.json")):
+            out.append(int(m.group(1)))
+    return sorted(out, reverse=True)
+
+
+def quarantine(directory: str, step: int) -> str:
+    """Rename a corrupt ``step_*`` directory to ``corrupt.step_*`` so no
+    future restart trusts it (payload kept on disk for postmortems).
+    Returns the quarantine path."""
+    src = os.path.join(directory, f"step_{step:012d}")
+    dst = os.path.join(directory, f"corrupt.step_{step:012d}")
+    if os.path.exists(dst):
+        shutil.rmtree(dst)
+    os.rename(src, dst)
+    return dst
+
+
 def restore(directory: str, step: int, like: Any,
             shardings: Optional[Any] = None) -> Tuple[Any, Dict]:
     """Restore into the structure of `like` (a pytree of arrays or
     ShapeDtypeStructs).  `shardings`, if given (same structure), device_puts
-    each leaf with the *new* sharding — elastic re-mesh happens here."""
+    each leaf with the *new* sharding — elastic re-mesh happens here.
+
+    Every payload is validated against the manifest (shape, dtype, crc32
+    content checksum when present — pre-hardening manifests lack it and
+    still restore); any mismatch raises :class:`CheckpointCorruption`.
+    """
     path = os.path.join(directory, f"step_{step:012d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointCorruption(f"unreadable manifest in {path}: {e}")
     keys = [k for k, _ in _flatten(like)]
     missing = [k for k in keys if k not in manifest["leaves"]]
     if missing:
@@ -104,7 +158,22 @@ def restore(directory: str, step: int, like: Any,
     arrays = {}
     for key in keys:
         meta = manifest["leaves"][key]
-        arr = np.load(os.path.join(path, meta["file"]))
+        fpath = os.path.join(path, meta["file"])
+        try:
+            arr = np.load(fpath)
+        except Exception as e:  # noqa: BLE001 — any load failure = corrupt
+            raise CheckpointCorruption(f"unreadable payload {fpath}: {e}")
+        if list(arr.shape) != list(meta["shape"]) \
+                or str(arr.dtype) != meta["dtype"]:
+            raise CheckpointCorruption(
+                f"{fpath}: shape/dtype {arr.shape}/{arr.dtype} != manifest "
+                f"{tuple(meta['shape'])}/{meta['dtype']}")
+        if "crc32" in meta:
+            crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+            if crc != meta["crc32"]:
+                raise CheckpointCorruption(
+                    f"{fpath}: crc32 {crc:#010x} != manifest "
+                    f"{meta['crc32']:#010x}")
         arrays[key] = arr
     flat_like, treedef = jax.tree_util.tree_flatten(like)
     flat_sh = (jax.tree_util.tree_flatten(shardings)[0]
@@ -145,6 +214,8 @@ class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3):
         self.directory = directory
         self.keep = keep
+        # (step, quarantine path, reason) for every corrupt dir sidelined
+        self.quarantined: List[Tuple[int, str, str]] = []
 
     def save(self, step: int, tree: Any, host_state: Optional[Dict] = None):
         path = save(self.directory, step, tree, host_state)
@@ -155,11 +226,21 @@ class CheckpointManager:
         return latest_step(self.directory)
 
     def restore_latest(self, like: Any, shardings: Optional[Any] = None):
-        step = self.latest_step()
-        if step is None:
-            return None, None, None
-        tree, host = restore(self.directory, step, like, shardings)
-        return step, tree, host
+        """Restore the newest checkpoint that passes validation.
+
+        A corrupt newest checkpoint (bitflip, torn write) is quarantined —
+        renamed ``corrupt.step_*``, payload kept for postmortems — and the
+        previous ``step_*`` directory is tried, until one validates or none
+        are left (then the None-tuple, same as an empty directory: the
+        caller cold-starts)."""
+        for step in available_steps(self.directory):
+            try:
+                tree, host = restore(self.directory, step, like, shardings)
+                return step, tree, host
+            except CheckpointCorruption as e:
+                self.quarantined.append(
+                    (step, quarantine(self.directory, step), str(e)))
+        return None, None, None
 
     def _gc(self):
         steps = sorted(

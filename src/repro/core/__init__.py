@@ -26,6 +26,16 @@ from repro.core.pacing import (  # noqa: F401
     raw_seqlen,
     seqlen_at,
 )
+from repro.core.recovery import (  # noqa: F401
+    DivergenceDetector,
+    DivergenceError,
+    DivergenceEvent,
+    RecoveryConfig,
+    RecoveryHook,
+    RecoveryRegulator,
+    RollbackController,
+    StateRing,
+)
 from repro.core.stability import (  # noqa: F401
     LossRatioTracker,
     momentum_stats,

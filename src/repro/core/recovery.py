@@ -1,0 +1,413 @@
+"""Divergence-aware recovery: detect, roll back, intervene, retry.
+
+The paper's central failure mode — a large-batch/large-LR run that silently
+diverges (loss spike -> NaN) and wastes everything since the last good
+state — is a *telemetry* problem before it is a checkpoint problem: the
+``var_max`` series the trainer already collects spikes ahead of the loss
+(§3 correlation; Molybog et al.'s Adam-instability analysis in PAPERS.md),
+and the loss-ratio tracker flags the spike itself.  ``TrainSupervisor``
+only reacts to Python exceptions, so a diverging-but-running step stream
+sails straight through it.  This module closes that gap in-process:
+
+* :class:`DivergenceDetector` — per-step classification of the realized
+  :class:`StepTelemetry` into ``nan_loss`` / ``nan_grad`` / ``loss_spike``
+  / ``var_excursion`` events (NaN always fires; the soft triggers carry a
+  grace period and a post-rollback cooldown so replayed steps and early
+  noise don't retrigger).
+* :class:`StateRing` — a short in-run ring of host-side snapshots
+  (train-state pytree + ``ControllerState`` + last telemetry), pushed only
+  on detector-clean steps, so a rollback never needs to touch disk.
+* :class:`RecoveryRegulator` — the intervention surface, living *inside*
+  the regulator stack so its state checkpoints/resumes through the same
+  ``ControllerState`` as every schedule: a multiplicative LR/grad-clip
+  backoff, a seq-len clamp measured in bucket-ladder rungs, and a data
+  window offset (skip the offending batches).
+* :class:`RollbackController` — ties it together: on an event, restore the
+  newest valid snapshot, re-seat the controller state (schedules resume
+  exactly), apply the next rung of the escalation ladder
+  (deepen LR backoff -> clamp seq-len one rung -> skip the data window),
+  bounded by a :class:`~repro.distributed.fault_tolerance.RetryPolicy`
+  shared with the process-level ``TrainSupervisor``.
+* :class:`RecoveryHook` — the trainer wiring (duck-typed ``TrainerHook``):
+  feed the detector after each step, push ring snapshots, trigger
+  rollbacks, clear the trainer's divergence stop when recovery succeeds.
+
+Every path here is exercised by deterministic fault injection
+(``repro.distributed.fault_injection``) rather than assumed.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import math
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.regulators import (ControllerState, Regulator, StepPlan,
+                                   StepTelemetry)
+from repro.distributed.fault_tolerance import RetryPolicy
+
+
+class DivergenceError(RuntimeError):
+    """In-process recovery exhausted its retry budget (hard failure).
+
+    Raised (when ``RecoveryConfig.escalate == "raise"``) so a wrapping
+    ``TrainSupervisor`` can take over with a process-level restart — the
+    two layers share one ``RetryPolicy`` notion of "how many times".
+    """
+
+
+@dataclass(frozen=True)
+class DivergenceEvent:
+    kind: str  # nan_loss | nan_grad | loss_spike | var_excursion
+    step: int
+    detail: str = ""
+
+    def __str__(self) -> str:
+        return f"{self.kind}@{self.step}({self.detail})"
+
+
+@dataclass(frozen=True)
+class RecoveryConfig:
+    """Thresholds + intervention parameters for the rollback controller."""
+
+    # detector
+    spike_ratio: float = 3.0     # loss / running-min-loss that counts as
+                                 # divergence (tracker's >1.2 is a *spike*;
+                                 # recovery acts on the catastrophic ones)
+    var_gate: float = 8.0        # var_max vs trailing mean excursion gate
+    var_sustain: int = 4         # consecutive excursion steps before firing
+    grace_steps: int = 5         # soft triggers silent this many first obs
+    cooldown_steps: int = 3      # soft triggers silent after a rollback
+    # snapshot ring
+    snapshot_interval: int = 5   # steps between ring snapshots
+    ring: int = 3                # snapshots kept in memory
+    # escalation ladder
+    lr_backoff: float = 0.5      # recovery LR scale multiplier per rung-1 hit
+    lr_floor: float = 0.05       # never scale the LR below this
+    skip_window_steps: int = 4   # data batches skipped at rung 3
+    # retry budget (shared shape with TrainSupervisor)
+    policy: RetryPolicy = RetryPolicy(max_retries=3)
+    # on exhaustion: "stop" marks the run diverged and halts the loop;
+    # "raise" surfaces DivergenceError (for TrainSupervisor pairing)
+    escalate: str = "stop"
+
+
+class DivergenceDetector:
+    """Classifies per-step telemetry into divergence events.
+
+    NaN/inf loss or grad norm fires unconditionally.  The two soft triggers
+    (loss-ratio spike, sustained var_max excursion) observe a grace period
+    at start and a cooldown after each rollback, and the var trailing mean
+    is only updated with non-excursion samples so the gate does not chase
+    the spike it is supposed to catch.
+    """
+
+    def __init__(self, cfg: RecoveryConfig):
+        self.cfg = cfg
+        self.n_obs = 0
+        self.cooldown = 0
+        self.var_trailing = 0.0
+        self.var_streak = 0
+
+    def begin_cooldown(self) -> None:
+        self.cooldown = self.cfg.cooldown_steps
+        self.var_streak = 0
+
+    def update(self, tele: StepTelemetry) -> Optional[DivergenceEvent]:
+        self.n_obs += 1
+        if not math.isfinite(tele.loss):
+            return DivergenceEvent("nan_loss", tele.step,
+                                   f"loss={tele.loss}")
+        if not math.isfinite(tele.grad_norm):
+            return DivergenceEvent("nan_grad", tele.step,
+                                   f"grad_norm={tele.grad_norm}")
+        if self.cooldown > 0:
+            self.cooldown -= 1
+            return None
+        if self.n_obs <= self.cfg.grace_steps:
+            if math.isfinite(tele.var_max):
+                self.var_trailing = (tele.var_max if self.var_trailing == 0.0
+                                     else 0.9 * self.var_trailing
+                                     + 0.1 * tele.var_max)
+            return None
+        if math.isfinite(tele.loss_ratio) \
+                and tele.loss_ratio > self.cfg.spike_ratio:
+            return DivergenceEvent(
+                "loss_spike", tele.step,
+                f"ratio={tele.loss_ratio:.2f}>{self.cfg.spike_ratio}")
+        if math.isfinite(tele.var_max) and self.var_trailing > 0.0 \
+                and tele.var_max > self.cfg.var_gate * self.var_trailing:
+            self.var_streak += 1
+            if self.var_streak >= self.cfg.var_sustain:
+                return DivergenceEvent(
+                    "var_excursion", tele.step,
+                    f"var_max={tele.var_max:.3g}>"
+                    f"{self.cfg.var_gate}x{self.var_trailing:.3g}"
+                    f" for {self.var_streak}")
+            return None
+        self.var_streak = 0
+        if math.isfinite(tele.var_max):
+            self.var_trailing = (tele.var_max if self.var_trailing == 0.0
+                                 else 0.9 * self.var_trailing
+                                 + 0.1 * tele.var_max)
+        return None
+
+
+@dataclass
+class Snapshot:
+    """One host-side restore point (everything a rollback re-seats)."""
+
+    step: int
+    tokens_seen: int
+    state: Any                    # train-state pytree of np.ndarray copies
+    controller: Dict[str, Any]    # ControllerState.to_host() deep copy
+    telemetry: StepTelemetry      # trainer's _last (plan inputs resume too)
+
+
+class StateRing:
+    """Short in-memory ring of train-state snapshots.
+
+    Host copies (``jax.device_get``) so the donated device buffers the
+    train step recycles are never aliased; restoring hands back fresh
+    ``jnp`` arrays, so the ring entry survives repeated rollbacks to the
+    same point.
+    """
+
+    def __init__(self, capacity: int = 3):
+        self.capacity = max(capacity, 1)
+        self._ring: Deque[Snapshot] = deque(maxlen=self.capacity)
+
+    def __len__(self) -> int:
+        return len(self._ring)
+
+    @property
+    def steps(self) -> List[int]:
+        return [s.step for s in self._ring]
+
+    def push(self, step: int, tokens_seen: int, state: Any,
+             controller: ControllerState, telemetry: StepTelemetry) -> None:
+        host_state = jax.tree_util.tree_map(
+            lambda x: np.array(jax.device_get(x)), state)
+        self._ring.append(Snapshot(
+            step=step, tokens_seen=tokens_seen, state=host_state,
+            controller=copy.deepcopy(controller.to_host()),
+            telemetry=dataclasses.replace(telemetry)))
+
+    def newest(self) -> Optional[Snapshot]:
+        return self._ring[-1] if self._ring else None
+
+    def drop_newest(self) -> None:
+        if self._ring:
+            self._ring.pop()
+
+    def materialize(self, snap: Snapshot) -> Any:
+        """Fresh device arrays from a snapshot (safe to donate)."""
+        return jax.tree_util.tree_map(jnp.asarray, snap.state)
+
+
+class RecoveryRegulator(Regulator):
+    """The intervention surface, as a regulator so it checkpoints.
+
+    Placed at the end of the stack: the LR schedule has already set the
+    scheduled value (``lr_scale`` multiplies it, like the variance
+    throttle), seq_len folds by min against the ladder clamp, and
+    ``data_offset`` is read by the trainer when indexing the data pipeline.
+    All three persist through ``ControllerState`` — a restart resumes the
+    intervention exactly, not just the schedules it protects.
+    """
+
+    name = "recovery"
+
+    def __init__(self, ladder: Tuple[int, ...], cfg: RecoveryConfig):
+        self.ladder = tuple(ladder)
+        self.cfg = cfg
+        self.lr_scale = 1.0
+        self.seq_drop = 0       # bucket-ladder rungs to clamp down
+        self.data_offset = 0    # extra batches skipped in the data stream
+
+    # -- escalation ladder ---------------------------------------------------
+    def deepen_lr(self) -> None:
+        self.lr_scale = max(self.lr_scale * self.cfg.lr_backoff,
+                            self.cfg.lr_floor)
+
+    def clamp_seq(self) -> None:
+        self.seq_drop = min(self.seq_drop + 1, len(self.ladder) - 1)
+
+    def skip_data(self) -> None:
+        self.data_offset += self.cfg.skip_window_steps
+
+    # -- regulator protocol --------------------------------------------------
+    def plan(self, tele: StepTelemetry, plan: StepPlan) -> StepPlan:
+        plan.lr *= self.lr_scale
+        plan.grad_clip_scale *= self.lr_scale
+        if self.seq_drop:
+            rung = 0
+            for i, s in enumerate(self.ladder):
+                if s <= plan.seq_len:
+                    rung = i
+            plan.seq_len = min(plan.seq_len,
+                               self.ladder[max(rung - self.seq_drop, 0)])
+        return plan
+
+    def state_dict(self) -> Dict[str, Any]:
+        return {"lr_scale": self.lr_scale, "seq_drop": self.seq_drop,
+                "data_offset": self.data_offset}
+
+    def load_state_dict(self, d: Dict[str, Any]) -> None:
+        self.lr_scale = float(d["lr_scale"])
+        self.seq_drop = int(d["seq_drop"])
+        self.data_offset = int(d["data_offset"])
+
+
+class RollbackController:
+    """Restore + intervene + retry, with a bounded budget.
+
+    The escalation ladder is cumulative across rollbacks: the first rollback
+    deepens the LR backoff (and the ``VarianceLRThrottle``'s own scale when
+    one is in the stack — the two throttles share the containment job), the
+    second additionally clamps the seq-len plan one ladder rung down, the
+    third and later also skip the offending data window.  When the retry
+    budget is exhausted the controller either stops the run (``escalate ==
+    "stop"``) or raises :class:`DivergenceError` for the process-level
+    supervisor.
+    """
+
+    def __init__(self, cfg: Optional[RecoveryConfig] = None):
+        self.cfg = cfg or RecoveryConfig()
+        self.detector = DivergenceDetector(self.cfg)
+        self.ring = StateRing(self.cfg.ring)
+        self.rollbacks = 0
+        self.events: List[str] = []
+        self._last_restore_step: Optional[int] = None
+
+    # -- snapshots -----------------------------------------------------------
+    def maybe_snapshot(self, trainer) -> None:
+        if trainer.step % max(self.cfg.snapshot_interval, 1) == 0 \
+                or not len(self.ring):
+            self.snapshot(trainer)
+
+    def snapshot(self, trainer) -> None:
+        self.ring.push(trainer.step, trainer.tokens_seen, trainer.state,
+                       trainer.controller_state(), trainer._last)
+
+    # -- the rollback --------------------------------------------------------
+    def handle(self, trainer, event: DivergenceEvent) -> bool:
+        """React to a divergence event.  Returns True when the run should
+        continue (state restored, intervention applied), False when the
+        budget is exhausted (or raises, per ``escalate``)."""
+        self.events.append(str(event))
+        if self.rollbacks >= self.cfg.policy.max_retries:
+            self.events.append(f"gave_up@{event.step}")
+            if self.cfg.escalate == "raise":
+                raise DivergenceError(
+                    f"recovery budget exhausted after "
+                    f"{self.rollbacks} rollbacks: {event}")
+            return False
+        self.rollbacks += 1
+
+        # the intervention regulator's state rides ControllerState, so a
+        # restore would also rewind earlier interventions; containment
+        # knobs must be monotone across rollbacks, so the pre-restore
+        # values are merged back in at their most-severe side
+        reg: RecoveryRegulator = trainer.stack["recovery"]
+        pre = reg.state_dict()
+
+        snap = self.ring.newest()
+        if snap is not None and snap.step == self._last_restore_step \
+                and len(self.ring) > 1:
+            # the newest restore point failed to hold twice in a row —
+            # fall back one snapshot before escalating further
+            self.ring.drop_newest()
+            snap = self.ring.newest()
+        if snap is None:
+            # no in-run snapshot yet: a disk checkpoint is the next-best
+            # restore point (trainer.resume re-seats controller state too)
+            if trainer.ckpt is not None and trainer.resume() is not None:
+                self.events.append(f"disk_restore@{trainer.step}")
+            else:
+                self.events.append(f"no_restore_point@{event.step}")
+                if self.cfg.escalate == "raise":
+                    raise DivergenceError(f"no restore point for {event}")
+                return False
+        else:
+            trainer.state = self.ring.materialize(snap)
+            trainer.load_controller_state(
+                ControllerState.from_host(copy.deepcopy(snap.controller)))
+            trainer._last = dataclasses.replace(snap.telemetry)
+            self._last_restore_step = snap.step
+            self.events.append(f"restored@{snap.step}")
+
+        post = reg.state_dict()
+        reg.load_state_dict({
+            "lr_scale": min(pre["lr_scale"], post["lr_scale"]),
+            "seq_drop": max(pre["seq_drop"], post["seq_drop"]),
+            "data_offset": max(pre["data_offset"], post["data_offset"]),
+        })
+        self._intervene(trainer)
+        self.detector.begin_cooldown()
+        return True
+
+    def _intervene(self, trainer) -> None:
+        reg: RecoveryRegulator = trainer.stack["recovery"]
+        # rung 1 (every rollback): deepen the LR/grad-clip backoff
+        reg.deepen_lr()
+        if "var_lr_throttle" in trainer.stack:
+            th = trainer.stack["var_lr_throttle"]
+            th.scale = max(th.scale * th.spec.backoff, th.spec.floor)
+        # rung 2: clamp the SLW seq-len plan one bucket down
+        if self.rollbacks >= 2:
+            reg.clamp_seq()
+        # rung 3: skip the offending data window
+        if self.rollbacks >= 3:
+            reg.skip_data()
+
+
+class RecoveryHook:
+    """Trainer wiring (duck-typed TrainerHook; no import cycle with
+    launch.train).  Ordering note: the trainer marks ``diverged``/
+    ``stopping`` before hooks run, so a successful rollback clears both and
+    the loop continues."""
+
+    def __init__(self, controller: RollbackController):
+        self.controller = controller
+
+    def on_run_start(self, tr) -> None:
+        # step-0 restore point: a fault before the first interval snapshot
+        # must still be recoverable
+        self.controller.snapshot(tr)
+
+    def on_step_start(self, tr) -> None:
+        pass
+
+    def on_step_end(self, tr, tele: StepTelemetry, plan: StepPlan,
+                    metrics: Dict[str, Any]) -> None:
+        event = self.controller.detector.update(tele)
+        if event is None:
+            # no snapshot while a var excursion streak is building: a
+            # poisoned-but-finite state must not become a restore point
+            if self.controller.detector.var_streak == 0:
+                self.controller.maybe_snapshot(tr)
+            return
+        recovered = self.controller.handle(tr, event)
+        tr.result.rollbacks = self.controller.rollbacks
+        tr.result.recovery_events = list(self.controller.events)
+        if recovered:
+            tr.stopping = False
+            tr.result.diverged = False
+        else:
+            tr.result.diverged = True
+            tr.stopping = True
+
+    def on_run_end(self, tr) -> None:
+        tr.result.rollbacks = self.controller.rollbacks
+        tr.result.recovery_events = list(self.controller.events)
+
+    def close(self) -> None:
+        pass

@@ -1,0 +1,247 @@
+"""Deterministic, seedable fault injection for the recovery paths.
+
+Every recovery mechanism in this repo (divergence rollback, checkpoint
+quarantine, supervisor restart, watchdog stragglers) is exercised by
+*injected* faults rather than assumed to work: the :class:`FaultInjector`
+holds a step-indexed list of :class:`FaultSpec` entries and fires each one
+exactly once, with all randomness (which parameter leaf to poison, which
+byte to flip) derived from ``seed`` + the fault's step — two runs with the
+same spec corrupt the same element.
+
+Fault kinds (CLI syntax ``kind@step[:arg]``, comma-separated):
+
+* ``nan_grad@12``       — poison one parameter element with NaN before step
+                          12; the forward/backward then produce NaN loss and
+                          gradients (the paper's terminal divergence).
+* ``spike@20:8.0``      — scale all parameters by ``arg`` (default 8.0)
+                          before step 20: a finite loss explosion, the
+                          loss-ratio spike precursor.
+* ``stall@8:0.25``      — sleep ``arg`` seconds before step 8 (straggler;
+                          feeds the StepWatchdog).
+* ``crash@30:post_tmp`` — raise :class:`InjectedCrash` from inside the
+                          checkpoint writer at step 30, at the named crash
+                          point: ``post_tmp`` (payload + manifest written,
+                          **before** the atomic rename — the classic
+                          partial-checkpoint crash) or ``post_rename``
+                          (after the rename; the checkpoint is valid but
+                          the process dies before reporting).
+
+Checkpoint-payload corruption is not step-indexed — it is a storage fault,
+injected directly with :meth:`FaultInjector.corrupt_checkpoint` (flip one
+deterministic byte in one payload file of a written checkpoint).
+
+Wiring: ``FaultInjectionHook`` mutates the trainer at ``on_step_start``
+(duck-typed TrainerHook — no import cycle with ``launch.train``); the crash
+points require module-level arming (:func:`arm` / :func:`disarm`) because
+the checkpoint writer has no injector handle — ``repro.checkpoint`` calls
+:func:`checkpoint_crash_point` at its two rename-boundary sites, a no-op
+unless a spec armed here matches.
+"""
+from __future__ import annotations
+
+import os
+import re
+import time
+from dataclasses import dataclass
+from typing import Any, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+KINDS = ("nan_grad", "spike", "stall", "crash")
+CRASH_POINTS = ("post_tmp", "post_rename")
+
+
+class InjectedCrash(RuntimeError):
+    """A deliberate, test-only process death (caught by supervisors)."""
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    kind: str   # nan_grad | spike | stall | crash
+    step: int
+    arg: str = ""
+
+    def __str__(self) -> str:
+        return f"{self.kind}@{self.step}" + (f":{self.arg}" if self.arg
+                                             else "")
+
+
+def parse_faults(spec: str) -> Tuple[FaultSpec, ...]:
+    """Parse the CLI syntax: ``"nan_grad@12,spike@20:8.0,crash@30:post_tmp"``.
+
+    Raises ValueError on unknown kinds, malformed entries, or a crash point
+    that the checkpoint writer does not define.
+    """
+    out: List[FaultSpec] = []
+    for entry in filter(None, (e.strip() for e in spec.split(","))):
+        m = re.fullmatch(r"([a-z_]+)@(\d+)(?::([^,]+))?", entry)
+        if not m:
+            raise ValueError(f"malformed fault spec {entry!r} "
+                             f"(want kind@step[:arg])")
+        kind, step, arg = m.group(1), int(m.group(2)), m.group(3) or ""
+        if kind not in KINDS:
+            raise ValueError(f"unknown fault kind {kind!r} (one of {KINDS})")
+        if kind == "crash" and arg and arg not in CRASH_POINTS:
+            raise ValueError(f"unknown crash point {arg!r} "
+                             f"(one of {CRASH_POINTS})")
+        out.append(FaultSpec(kind, step, arg))
+    return tuple(out)
+
+
+class FaultInjector:
+    """Fires each spec exactly once, deterministically.
+
+    Fire-once matters for recovery testing: after a rollback the trainer
+    re-executes the faulted step index, and a fault that re-fired forever
+    would make every recovery test a guaranteed failure — transient faults
+    are the model here (persistent ones are what the retry *budget* is
+    for).
+    """
+
+    def __init__(self, specs: Sequence[FaultSpec] = (), seed: int = 0):
+        self.specs = tuple(specs)
+        self.seed = seed
+        self.fired: List[str] = []
+        self._done = set()
+
+    @classmethod
+    def from_cli(cls, spec: str, seed: int = 0) -> "FaultInjector":
+        return cls(parse_faults(spec), seed=seed)
+
+    def _rng(self, spec: FaultSpec) -> np.random.RandomState:
+        return np.random.RandomState((self.seed * 1_000_003 + spec.step)
+                                     % (2 ** 31 - 1))
+
+    def _take(self, kind: str, step: int) -> Optional[FaultSpec]:
+        for i, s in enumerate(self.specs):
+            if i not in self._done and s.kind == kind and s.step == step:
+                self._done.add(i)
+                self.fired.append(str(s))
+                return s
+        return None
+
+    # -- step-indexed faults (trainer pre-step) ------------------------------
+    def pre_step(self, trainer) -> None:
+        """Apply any fault scheduled for ``trainer.step`` (mutates
+        ``trainer.state`` in place for the parameter faults)."""
+        step = trainer.step
+        s = self._take("stall", step)
+        if s is not None:
+            time.sleep(float(s.arg or 0.25))
+        s = self._take("nan_grad", step)
+        if s is not None:
+            trainer.state = self.poison_params(trainer.state, step)
+        s = self._take("spike", step)
+        if s is not None:
+            trainer.state = self.scale_params(trainer.state, step,
+                                              float(s.arg or 8.0))
+
+    def poison_params(self, state: Any, step: int) -> Any:
+        """NaN one deterministically-chosen parameter element."""
+        rng = self._rng(FaultSpec("nan_grad", step))
+        leaves, treedef = jax.tree_util.tree_flatten(state["params"])
+        float_idx = [i for i, x in enumerate(leaves)
+                     if np.issubdtype(np.asarray(x).dtype, np.floating)]
+        pick = float_idx[rng.randint(len(float_idx))]
+        arr = np.array(jax.device_get(leaves[pick]))
+        arr.flat[rng.randint(arr.size)] = np.nan
+        leaves[pick] = jnp.asarray(arr)
+        out = dict(state)
+        out["params"] = jax.tree_util.tree_unflatten(treedef, leaves)
+        return out
+
+    def scale_params(self, state: Any, step: int, factor: float) -> Any:
+        """Multiply every parameter by ``factor`` (finite loss explosion)."""
+        out = dict(state)
+        out["params"] = jax.tree_util.tree_map(
+            lambda x: x * np.asarray(factor, np.asarray(x).dtype),
+            state["params"])
+        return out
+
+    # -- checkpoint crash points ---------------------------------------------
+    def maybe_crash(self, point: str, step: int) -> None:
+        for i, s in enumerate(self.specs):
+            if i in self._done or s.kind != "crash" or s.step != step:
+                continue
+            if (s.arg or "post_tmp") == point:
+                self._done.add(i)
+                self.fired.append(str(s))
+                raise InjectedCrash(f"injected crash at checkpoint "
+                                    f"{point} (step {step})")
+
+    # -- storage faults ------------------------------------------------------
+    def corrupt_checkpoint(self, directory: str,
+                           step: Optional[int] = None) -> str:
+        """Flip one deterministic byte in one payload file of checkpoint
+        ``step`` (newest if None).  Returns the corrupted file's path."""
+        from repro.checkpoint import latest_step
+        if step is None:
+            step = latest_step(directory)
+        if step is None:
+            raise ValueError(f"no checkpoint to corrupt in {directory}")
+        path = os.path.join(directory, f"step_{step:012d}")
+        payloads = sorted(n for n in os.listdir(path) if n.endswith(".npy"))
+        rng = self._rng(FaultSpec("bitflip", step))
+        target = os.path.join(path, payloads[rng.randint(len(payloads))])
+        with open(target, "r+b") as f:
+            data = bytearray(f.read())
+            # flip a bit in the back half: inside the array payload, past
+            # the .npy header, so np.load still parses and the *checksum*
+            # has to catch it
+            pos = len(data) // 2 + rng.randint(max(len(data) // 2, 1))
+            pos = min(pos, len(data) - 1)
+            data[pos] ^= 1 << rng.randint(8)
+            f.seek(0)
+            f.write(data)
+        self.fired.append(f"bitflip@{step}:{os.path.basename(target)}")
+        return target
+
+
+class FaultInjectionHook:
+    """Duck-typed TrainerHook applying step-indexed faults before the plan
+    is made (so the injected state is what the step consumes)."""
+
+    def __init__(self, injector: FaultInjector):
+        self.injector = injector
+
+    def on_run_start(self, tr) -> None:
+        arm(self.injector)
+
+    def on_step_start(self, tr) -> None:
+        self.injector.pre_step(tr)
+
+    def on_step_end(self, tr, tele, plan, metrics) -> None:
+        pass
+
+    def on_run_end(self, tr) -> None:
+        tr.result.faults_fired = list(self.injector.fired)
+
+    def close(self) -> None:
+        disarm()
+
+
+# ---------------------------------------------------------------------------
+# module-level arming for the checkpoint crash points
+# ---------------------------------------------------------------------------
+
+_armed: Optional[FaultInjector] = None
+
+
+def arm(injector: FaultInjector) -> None:
+    global _armed
+    _armed = injector
+
+
+def disarm() -> None:
+    global _armed
+    _armed = None
+
+
+def checkpoint_crash_point(point: str, step: int) -> None:
+    """Called by ``repro.checkpoint`` at its rename boundaries; no-op unless
+    an injector with a matching ``crash@step:point`` spec is armed."""
+    if _armed is not None:
+        _armed.maybe_crash(point, step)

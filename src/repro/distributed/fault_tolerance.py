@@ -50,6 +50,24 @@ class DrainSignal:
     def trigger(self) -> None:  # for tests
         self._flag = True
 
+    def uninstall(self) -> None:
+        """Restore the handlers that were active before installation.
+
+        Without this the latched handler leaks across Trainer instances and
+        tests (the next DrainSignal would record *our* stale handler as the
+        previous one).  Idempotent; the Trainer calls it at teardown via the
+        drain hook's ``close``.
+        """
+        for sig, prev in self._prev.items():
+            try:
+                # == not `is`: each _handler attribute access builds a fresh
+                # bound method, so identity never matches the stored one
+                if signal.getsignal(sig) == self._handler:
+                    signal.signal(sig, prev)
+            except ValueError:  # not in main thread
+                pass
+        self._prev = {}
+
 
 @dataclass
 class StepWatchdog:
@@ -64,8 +82,16 @@ class StepWatchdog:
         self._t0 = time.monotonic()
 
     def stop(self) -> bool:
-        """Record the step; returns True if it was a straggler."""
+        """Record the step; returns True if it was a straggler.
+
+        ``stop`` without a matching ``start`` records nothing — a hook
+        order that skips ``start`` (drain/early-stop paths) used to crash
+        on ``self._t0`` being None.
+        """
+        if self._t0 is None:
+            return False
         dt = time.monotonic() - self._t0
+        self._t0 = None
         self.durations.append(dt)
         self.durations = self.durations[-self.window:]
         self._step += 1
@@ -83,28 +109,61 @@ class StepWatchdog:
                 "stragglers": len(self.straggler_steps)}
 
 
+@dataclass(frozen=True)
+class RetryPolicy:
+    """How many times to retry and how long to wait — the one policy shared
+    by process-level restarts (:class:`TrainSupervisor`) and in-process
+    rollbacks (:class:`repro.core.recovery.RollbackController`), so the two
+    containment layers are budgeted together rather than multiplying."""
+
+    max_retries: int = 3
+    backoff_s: float = 0.0       # base sleep before retry `1` (0 = none)
+    backoff_factor: float = 2.0  # exponential growth per further retry
+    backoff_cap_s: float = 60.0  # ceiling on any single sleep
+
+    def delay(self, attempt: int) -> float:
+        """Sleep before retry ``attempt`` (1-based)."""
+        if self.backoff_s <= 0.0:
+            return 0.0
+        return min(self.backoff_s * self.backoff_factor ** (attempt - 1),
+                   self.backoff_cap_s)
+
+
 @dataclass
 class TrainSupervisor:
     """Retry loop around a (resumable) train function.
 
     `run_fn(resume: bool) -> str` must itself restore from the latest
     checkpoint when `resume` is True and return a status string.
+
+    Retries back off exponentially (``policy``; the legacy
+    ``max_restarts``/``backoff_s`` fields seed a default policy), and every
+    failure is recorded with its wall-clock timestamp and attempt number in
+    ``failures`` for postmortems.
     """
     max_restarts: int = 3
     backoff_s: float = 0.0
     restarts: int = 0
-    failures: List[str] = field(default_factory=list)
+    failures: List[Dict] = field(default_factory=list)
+    policy: Optional[RetryPolicy] = None
 
     def run(self, run_fn: Callable[[bool], str]) -> str:
+        policy = self.policy or RetryPolicy(max_retries=self.max_restarts,
+                                            backoff_s=self.backoff_s)
         resume = False
         while True:
             try:
                 return run_fn(resume)
             except Exception as e:  # noqa: BLE001 — supervisor boundary
                 self.restarts += 1
-                self.failures.append(f"{type(e).__name__}: {e}")
-                if self.restarts > self.max_restarts:
+                self.failures.append({
+                    "error": f"{type(e).__name__}: {e}",
+                    "time": time.time(),
+                    "attempt": self.restarts,
+                })
+                if self.restarts > policy.max_retries:
                     raise
-                if self.backoff_s:
-                    time.sleep(self.backoff_s)
+                delay = policy.delay(self.restarts)
+                if delay:
+                    time.sleep(delay)
                 resume = True

@@ -39,11 +39,16 @@ from repro.configs import get_arch, reduced as reduce_cfg
 from repro.configs.base import (
     BatchWarmupConfig, OptimizerConfig, RegulatorSpec, SLWConfig, TrainConfig)
 from repro.core import LossRatioTracker
+from repro.core.recovery import (RecoveryConfig, RecoveryHook,
+                                 RecoveryRegulator, RollbackController)
 from repro.core.regulators import (ControllerState, RegulatorStack, StepPlan,
                                    StepTelemetry, build_stack)
 from repro.checkpoint import CheckpointManager, migrate_host_state
 from repro.data import DataPipeline, SyntheticCorpus
-from repro.distributed.fault_tolerance import DrainSignal, StepWatchdog
+from repro.distributed.fault_injection import (FaultInjectionHook,
+                                               FaultInjector)
+from repro.distributed.fault_tolerance import (DrainSignal, RetryPolicy,
+                                               StepWatchdog)
 from repro.launch import steps as steps_lib
 from repro.models import model_zoo
 
@@ -68,6 +73,10 @@ class TrainResult:
     watchdog_summary: Dict[str, float] = field(default_factory=dict)
     n_compiles: int = 0
     restored_from_step: Optional[int] = None
+    # divergence-aware recovery accounting (core.recovery)
+    rollbacks: int = 0
+    recovery_events: List[str] = field(default_factory=list)
+    faults_fired: List[str] = field(default_factory=list)
 
 
 # ---------------------------------------------------------------------------
@@ -109,6 +118,12 @@ class DrainHook(TrainerHook):
     def on_step_start(self, tr: "Trainer") -> None:
         if self.drain is not None and self.drain.should_drain:
             tr.request_drain()
+
+    def close(self) -> None:
+        # restore whatever handlers preceded this trainer — installed
+        # handlers used to leak across Trainer instances and tests
+        if self.drain is not None:
+            self.drain.uninstall()
 
 
 class WatchdogHook(TrainerHook):
@@ -239,9 +254,14 @@ class Trainer:
                  callback: Optional[Callable[[int, Dict[str, float]],
                                              None]] = None,
                  fail_at_step: Optional[int] = None, quiet: bool = True,
-                 hooks: Optional[List[TrainerHook]] = None):
+                 hooks: Optional[List[TrainerHook]] = None,
+                 recovery: Optional[RecoveryConfig] = None,
+                 fault_injector: Optional[FaultInjector] = None):
         """`hooks` are appended after the default hook set (drain, watchdog,
-        telemetry, eval, checkpoint)."""
+        telemetry, eval, checkpoint).  ``recovery`` enables the in-process
+        divergence rollback controller (core.recovery); ``fault_injector``
+        arms deterministic fault injection for this run
+        (distributed.fault_injection)."""
         self.tc = tc
         self.dp_size = max(dp_size, 1)
         self.stop_on_nan = stop_on_nan
@@ -277,6 +297,18 @@ class Trainer:
         self._last = StepTelemetry()
         self._seen_shapes = set()
 
+        # divergence-aware recovery: the intervention regulator joins the
+        # stack (so its state checkpoints through ControllerState) and the
+        # rollback controller rides the hook list
+        self.recovery: Optional[RollbackController] = None
+        self._recovery_reg: Optional[RecoveryRegulator] = None
+        if recovery is not None:
+            ladder = (self.stack["seqlen"].curriculum.ladder
+                      if "seqlen" in self.stack else (tc.seq_len,))
+            self._recovery_reg = RecoveryRegulator(ladder, recovery)
+            self.stack.regulators.append(self._recovery_reg)
+            self.recovery = RollbackController(recovery)
+
         # `hooks` extends the defaults (it does not replace them — drain/
         # callback/eval would silently stop working otherwise)
         self.hooks: List[TrainerHook] = [
@@ -285,7 +317,12 @@ class Trainer:
             TelemetryHook(callback),
             EvalHook(eval_batch=eval_batch, quiet=quiet),
             CheckpointHook(),
-        ] + list(hooks or [])
+        ]
+        if self.recovery is not None:
+            self.hooks.append(RecoveryHook(self.recovery))
+        if fault_injector is not None:
+            self.hooks.append(FaultInjectionHook(fault_injector))
+        self.hooks += list(hooks or [])
 
     # -- control signals -----------------------------------------------------
     def request_drain(self) -> None:
@@ -332,7 +369,11 @@ class Trainer:
         tele = dataclasses.replace(self._last, step=self.step,
                                    tokens_seen=self.tokens_seen)
         plan = self.stack.plan(tele)
-        batch = self.pipeline.batch_at(self.step)
+        # the recovery regulator's data offset skips past a data window the
+        # rollback controller blamed for a divergence
+        offset = (self._recovery_reg.data_offset
+                  if self._recovery_reg is not None else 0)
+        batch = self.pipeline.batch_at(self.step + offset)
         batch, tokens_step = self.stack.apply(batch, plan)
 
         shape_key = tuple(sorted((k, v.shape) for k, v in batch.items()))
@@ -398,6 +439,8 @@ class Trainer:
             raise
         for h in self.hooks:
             h.on_run_end(self)
+        for h in self.hooks:
+            h.close()
         self.result.steps = self.step
         self.result.tokens = self.tokens_seen
         self.result.wall_time_s = time.time() - t_start
@@ -414,15 +457,20 @@ def train(tc: TrainConfig,
           fail_at_step: Optional[int] = None,
           quiet: bool = True,
           dp_size: int = 1,
-          hooks: Optional[List[TrainerHook]] = None) -> TrainResult:
+          hooks: Optional[List[TrainerHook]] = None,
+          recovery: Optional[RecoveryConfig] = None,
+          fault_injector: Optional[FaultInjector] = None) -> TrainResult:
     """Run the training loop on the local device(s). Returns full telemetry.
 
     Thin wrapper over :class:`Trainer` so existing entry points keep
-    working.  `fail_at_step` injects a crash (fault-tolerance tests/drills).
+    working.  `fail_at_step` injects a crash (fault-tolerance tests/drills);
+    `fault_injector` injects the richer step-indexed fault matrix and
+    `recovery` turns on divergence rollback.
     """
     trainer = Trainer(tc, dp_size=dp_size, eval_batch=eval_batch,
                       stop_on_nan=stop_on_nan, drain=drain, callback=callback,
-                      fail_at_step=fail_at_step, quiet=quiet, hooks=hooks)
+                      fail_at_step=fail_at_step, quiet=quiet, hooks=hooks,
+                      recovery=recovery, fault_injector=fault_injector)
     if resume:
         trainer.resume()
     return trainer.run(max_steps=max_steps)
@@ -517,6 +565,19 @@ def main(argv=None) -> int:
     p.add_argument("--metrics-jsonl", default="",
                    help="append per-step StepPlan/StepTelemetry rows to "
                         "this JSONL file (telemetry TrainerHook)")
+    p.add_argument("--recover", action="store_true",
+                   help="divergence-aware recovery: detect NaN/spike/"
+                        "variance excursions, roll back to an in-run "
+                        "snapshot, intervene (LR backoff -> seq clamp -> "
+                        "data skip)")
+    p.add_argument("--max-rollbacks", type=int, default=3,
+                   help="in-process rollback budget before hard failure")
+    p.add_argument("--inject-faults", default="",
+                   help="deterministic fault matrix, e.g. "
+                        "'nan_grad@12,spike@20:8.0,crash@30:post_tmp,"
+                        "stall@8:0.25' (kind@step[:arg], comma-separated)")
+    p.add_argument("--inject-seed", type=int, default=0,
+                   help="seed for fault placement (which leaf/byte)")
     args = p.parse_args(argv)
 
     tc = build_config(args)
@@ -524,13 +585,21 @@ def main(argv=None) -> int:
     dp = args.dp_size or jax.device_count()
     hooks = ([MetricsJsonlHook(args.metrics_jsonl)]
              if args.metrics_jsonl else None)
+    recovery = (RecoveryConfig(policy=RetryPolicy(
+        max_retries=args.max_rollbacks)) if args.recover else None)
+    injector = (FaultInjector.from_cli(args.inject_faults,
+                                       seed=args.inject_seed)
+                if args.inject_faults else None)
     res = train(tc, resume=args.resume, drain=drain, quiet=False, dp_size=dp,
-                hooks=hooks)
+                hooks=hooks, recovery=recovery, fault_injector=injector)
     print(f"\ndone: steps={res.steps} tokens={res.tokens} "
           f"diverged={res.diverged} compiles={res.n_compiles}")
     print("stability:", res.tracker_summary)
     print("watchdog:", res.watchdog_summary)
-    return 0
+    if recovery is not None or injector is not None:
+        print(f"recovery: rollbacks={res.rollbacks} "
+              f"events={res.recovery_events} faults={res.faults_fired}")
+    return 0 if not res.diverged else 1
 
 
 if __name__ == "__main__":

@@ -20,6 +20,7 @@ recurrent backbones).
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Callable, Dict, List, Optional, Sequence
@@ -31,7 +32,8 @@ import jax.numpy as jnp
 
 from repro.models import model_zoo
 from repro.serve import sampling
-from repro.serve.scheduler import Scheduler, SchedulerConfig, prefill_split
+from repro.serve.scheduler import (QueueFull, Scheduler, SchedulerConfig,
+                                   prefill_split)
 from repro.serve.state import SlotDecodeState
 from repro.serve.types import GenerationResult, Request
 
@@ -49,6 +51,10 @@ class EngineStats:
     generated_tokens: int = 0
     admitted: int = 0
     step_times: List[float] = field(default_factory=list)
+    # containment accounting: slots retired with reason="error" (the batch
+    # kept going) and submissions shed at the bounded queue
+    slot_errors: int = 0
+    shed: int = 0
 
     @property
     def prefill_tok_s(self) -> float:
@@ -146,36 +152,71 @@ class InferenceEngine:
         """
         t0 = time.time()
         reqs = [r for _, r in admissions]
-        split = prefill_split(reqs[0].prompt_len, self.scheduler.ladder)
-        toks = jnp.asarray([r.tokens[:split] for r in reqs], jnp.int32)
-        logits, kcache = self._prefill(self.params, {"tokens": toks})
+        try:
+            split = prefill_split(reqs[0].prompt_len, self.scheduler.ladder)
+            toks = jnp.asarray([r.tokens[:split] for r in reqs], jnp.int32)
+            logits, kcache = self._prefill(self.params, {"tokens": toks})
+        except Exception:  # noqa: BLE001 — shared phase: all k slots fail
+            for slot, req in admissions:
+                self.scheduler.abort(slot, req)
+                self.stats.slot_errors += 1
+            return
         row_logits = [logits[i:i + 1] for i in range(len(reqs))]
+        failed = [False] * len(reqs)
         if any(r.prompt_len > split for r in reqs):
             rows = [self.state.row(kcache, i) for i in range(len(reqs))]
             for i, r in enumerate(reqs):
-                full = jnp.asarray(r.tokens, jnp.int32)[None, :]
-                for j in range(split, r.prompt_len):
-                    row_logits[i], rows[i] = self.state.decode(
-                        self.params, rows[i], full[:, j:j + 1])
-            stacked = self.state.stack_rows(rows)
+                try:
+                    full = jnp.asarray(r.tokens, jnp.int32)[None, :]
+                    for j in range(split, r.prompt_len):
+                        row_logits[i], rows[i] = self.state.decode(
+                            self.params, rows[i], full[:, j:j + 1])
+                except Exception:  # noqa: BLE001 — this request only
+                    failed[i] = True
+            live = [i for i in range(len(reqs)) if not failed[i]]
+            stacked = (self.state.stack_rows([rows[i] for i in live])
+                       if live else None)
         else:
+            live = list(range(len(reqs)))
             stacked = kcache
-        self.cache = self.state.insert_many(
-            self.cache, np.asarray([s for s, _ in admissions], np.int32),
-            stacked)
-        firsts = [self._first_token(r, row_logits[i])
-                  for i, r in enumerate(reqs)]
+        if stacked is not None:
+            self.cache = self.state.insert_many(
+                self.cache,
+                np.asarray([admissions[i][0] for i in live], np.int32),
+                stacked)
+        firsts: Dict[int, int] = {}
+        for i in live:
+            try:
+                firsts[i] = self._first_token(reqs[i], row_logits[i])
+            except Exception:  # noqa: BLE001 — per-request sampling fault
+                failed[i] = True
         dt = time.time() - t0
         self.stats.prefill_s += dt
-        self.stats.prefill_tokens += sum(r.prompt_len for r in reqs)
-        self.stats.admitted += len(reqs)
-        self.stats.generated_tokens += len(reqs)
-        for (slot, req), first in zip(admissions, firsts):
-            st = self.scheduler.activate(slot, req, first,
-                                         dt / len(admissions))
-            if on_token:
-                on_token(req.uid, first)
-            reason = self.scheduler.stop_reason(st)
+        self.stats.prefill_tokens += sum(r.prompt_len for i, r
+                                         in enumerate(reqs) if not failed[i])
+        n_ok = sum(not f for f in failed)
+        self.stats.admitted += n_ok
+        self.stats.generated_tokens += n_ok
+        for i, (slot, req) in enumerate(admissions):
+            if failed[i]:
+                # the failing request retires alone; if its cache row was
+                # already inserted (sampling failed after insert_many) the
+                # row is cleared — the rest of the batch proceeds
+                if i in live:
+                    self.cache = self.state.evict(self.cache, slot)
+                self.scheduler.abort(slot, req)
+                self.stats.slot_errors += 1
+                continue
+            st = self.scheduler.activate(slot, req, firsts[i],
+                                         dt / max(n_ok, 1))
+            try:
+                if on_token:
+                    on_token(req.uid, firsts[i])
+                reason = self.scheduler.stop_reason(st)
+            except Exception:  # noqa: BLE001 — consumer callback fault
+                self._retire(slot, "error")
+                self.stats.slot_errors += 1
+                continue
             if reason:
                 self._retire(slot, reason)
 
@@ -221,12 +262,17 @@ class InferenceEngine:
         self.stats.decode_steps += 1
         self.stats.generated_tokens += len(active_now)
         for slot, st in active_now:
-            tok = int(nxt[slot])
-            st.result.tokens.append(tok)
-            st.last_token = tok
-            if on_token:
-                on_token(st.request.uid, tok)
-            reason = self.scheduler.stop_reason(st)
+            try:
+                tok = int(nxt[slot])
+                st.result.tokens.append(tok)
+                st.last_token = tok
+                if on_token:
+                    on_token(st.request.uid, tok)
+                reason = self.scheduler.stop_reason(st)
+            except Exception:  # noqa: BLE001 — retire only this slot; the
+                self._retire(slot, "error")  # rest of the batch finishes
+                self.stats.slot_errors += 1
+                continue
             if reason:
                 self._retire(slot, reason)
 
@@ -242,8 +288,13 @@ class InferenceEngine:
         Validation is all-or-nothing: a bad request enqueues nothing.
         """
         requests = list(requests)  # tolerate generators: iterated 3 times
-        self.scheduler.submit_all(requests)
-        while self.scheduler.busy:
+        self.scheduler.validate_batch(requests)
+        # feed through the bounded queue: run() owns its whole request set,
+        # so nothing is shed — the backlog drains as pending slots open
+        backlog = deque(requests)
+        while backlog or self.scheduler.busy:
+            while backlog and self.scheduler.has_room:
+                self.scheduler.enqueue_validated(backlog.popleft())
             while True:
                 adm = self.scheduler.next_admission(self.cfg.prefill_batch)
                 if not adm:
@@ -254,6 +305,18 @@ class InferenceEngine:
         done, self.scheduler.finished = self.scheduler.finished, []
         by_uid: Dict[int, GenerationResult] = {r.uid: r for r in done}
         return [by_uid[r.uid] for r in requests]
+
+    def try_submit(self, request: Request) -> bool:
+        """Streaming-caller admission with explicit shed on overload:
+        returns False (and counts the shed) when the bounded pending queue
+        is full.  Invalid requests still raise — a malformed request is a
+        caller bug, not an overload signal."""
+        try:
+            self.scheduler.submit(request)
+            return True
+        except QueueFull:
+            self.stats.shed += 1
+            return False
 
     def reset_stats(self) -> EngineStats:
         """Swap in a fresh stats accumulator (returns the old one)."""

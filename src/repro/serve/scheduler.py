@@ -29,6 +29,15 @@ from repro.serve.types import GenerationResult, Request
 from repro.serve import sampling
 
 
+class QueueFull(RuntimeError):
+    """Bounded submit queue is at capacity — the caller must shed or retry.
+
+    Overload is an explicit signal, not silent queue growth: at production
+    rates an unbounded pending deque is memory-pressure-then-OOM, and the
+    caller (router, API front-end) is the layer that knows whether to
+    reject with 429, retry elsewhere, or spill."""
+
+
 @dataclass(frozen=True)
 class SchedulerConfig:
     """Knobs for slot/bucket composition.
@@ -46,6 +55,10 @@ class SchedulerConfig:
                   behavior; >1 amortizes weight reads across prompts and
                   multiplies the prefill shape set by at most
                   prefill_batch).
+    max_pending:  bound on the pending queue (0 = unbounded, the legacy
+                  behavior).  ``submit``/``submit_all`` raise
+                  :class:`QueueFull` at capacity; the engine's
+                  ``try_submit`` turns that into an explicit shed.
     """
 
     n_slots: int = 8
@@ -54,6 +67,7 @@ class SchedulerConfig:
     round_multiple: int = 32
     max_buckets: int = 8
     prefill_batch: int = 1
+    max_pending: int = 0
 
     def ladder(self) -> Tuple[int, ...]:
         slw = SLWConfig(enabled=True, start_seq_len=self.min_prompt_bucket,
@@ -128,7 +142,15 @@ class Scheduler:
         return ({r.uid for r in self.pending}
                 | {s.request.uid for s in self.active.values()})
 
+    @property
+    def has_room(self) -> bool:
+        return (not self.cfg.max_pending
+                or len(self.pending) < self.cfg.max_pending)
+
     def submit(self, request: Request) -> None:
+        if not self.has_room:
+            raise QueueFull(f"pending queue at capacity "
+                            f"({self.cfg.max_pending})")
         self._validate(request, self._in_flight_uids())
         self.pending.append(request)
 
@@ -137,12 +159,31 @@ class Scheduler:
         batch enqueues nothing (a half-submitted batch would leak orphan
         pending requests into the caller's next drain).  ``requests`` is
         materialized once up front — a generator used to be exhausted by
-        the validation pass, silently enqueueing nothing."""
+        the validation pass, silently enqueueing nothing.  Overload is
+        all-or-nothing too: if the whole batch does not fit under
+        ``max_pending``, :class:`QueueFull`."""
         requests = list(requests)
+        if self.cfg.max_pending and \
+                len(self.pending) + len(requests) > self.cfg.max_pending:
+            raise QueueFull(
+                f"{len(requests)} requests exceed pending capacity "
+                f"{self.cfg.max_pending} ({len(self.pending)} queued)")
         uids = self._in_flight_uids()
         for r in requests:
             self._validate(r, uids)
         self.pending.extend(requests)
+
+    def validate_batch(self, requests) -> None:
+        """Validation only (uid/shape checks against in-flight + each
+        other), no enqueue — the engine validates its whole request set
+        up front, then feeds it through the bounded queue incrementally."""
+        uids = self._in_flight_uids()
+        for r in requests:
+            self._validate(r, uids)
+
+    def enqueue_validated(self, request: Request) -> None:
+        """Append one already-validated request (engine backlog feed)."""
+        self.pending.append(request)
 
     def next_admission(self, k: int = 1) -> List[Tuple[int, Request]]:
         """Pop up to ``k`` same-split (free slot, request) pairs; [] if no
@@ -200,6 +241,20 @@ class Scheduler:
         self.free.append(slot)
         self.finished.append(st.result)
         return st.result
+
+    def abort(self, slot: int, request: Request, detail: str = ""
+              ) -> GenerationResult:
+        """Retire a slot whose request failed *before* activation (e.g. its
+        admission sampling raised): free the slot, record an ``error``
+        result so the caller still gets an answer for the uid."""
+        res = GenerationResult(uid=request.uid,
+                               prompt_len=request.prompt_len,
+                               finish_reason="error")
+        if slot in self.active:  # activated before the failure surfaced
+            self.active.pop(slot)
+        self.free.append(slot)
+        self.finished.append(res)
+        return res
 
     # -- state -------------------------------------------------------------
     @property

@@ -53,7 +53,7 @@ class GenerationResult:
     uid: int
     prompt_len: int
     tokens: list = field(default_factory=list)
-    finish_reason: str = ""  # length | stop_token | aborted
+    finish_reason: str = ""  # length | stop_token | aborted | error
     # engine accounting (host wall-clock, seconds)
     prefill_s: float = 0.0
     decode_steps: int = 0

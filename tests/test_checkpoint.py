@@ -8,7 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import CheckpointManager, latest_step, restore, save
+from repro.checkpoint import (CheckpointCorruption, CheckpointManager,
+                              available_steps, latest_step, restore, save)
 
 
 def _tree(seed=0):
@@ -67,3 +68,114 @@ def test_restore_missing_leaf_raises(tmp_path):
     save(d, 1, {"a": jnp.zeros(3)})
     with pytest.raises(ValueError, match="missing"):
         restore(d, 1, {"a": jnp.zeros(3), "b": jnp.zeros(3)})
+
+
+# ---------------------------------------------------------------------------
+# corruption detection + quarantine fallback (PR: recovery hardening)
+# ---------------------------------------------------------------------------
+
+def _like(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _flip_payload_byte(d, step, which=0):
+    path = os.path.join(d, f"step_{step:012d}")
+    payloads = sorted(n for n in os.listdir(path) if n.endswith(".npy"))
+    target = os.path.join(path, payloads[which])
+    with open(target, "r+b") as f:
+        data = bytearray(f.read())
+        data[-1] ^= 0xFF  # inside the array payload, past the .npy header
+        f.seek(0)
+        f.write(data)
+    return target
+
+
+def test_manifest_carries_crc32_per_leaf(tmp_path):
+    d = str(tmp_path / "ckpt")
+    save(d, 2, _tree())
+    with open(os.path.join(d, "step_000000000002", "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["leaves"]
+    for meta in manifest["leaves"].values():
+        assert isinstance(meta["crc32"], int)
+
+
+def test_bitflip_fails_checksum(tmp_path):
+    d = str(tmp_path / "ckpt")
+    tree = _tree()
+    save(d, 2, tree)
+    _flip_payload_byte(d, 2)
+    with pytest.raises(CheckpointCorruption, match="crc32"):
+        restore(d, 2, _like(tree))
+
+
+def test_shape_mismatch_is_corruption(tmp_path):
+    d = str(tmp_path / "ckpt")
+    tree = _tree()
+    save(d, 2, tree)
+    path = os.path.join(d, "step_000000000002")
+    payloads = sorted(n for n in os.listdir(path) if n.endswith(".npy"))
+    np.save(os.path.join(path, payloads[0]), np.zeros((2, 2)))
+    with pytest.raises(CheckpointCorruption):
+        restore(d, 2, _like(tree))
+
+
+def test_unreadable_manifest_is_corruption(tmp_path):
+    d = str(tmp_path / "ckpt")
+    tree = _tree()
+    save(d, 2, tree)
+    with open(os.path.join(d, "step_000000000002", "manifest.json"),
+              "w") as f:
+        f.write("{not json")
+    with pytest.raises(CheckpointCorruption):
+        restore(d, 2, _like(tree))
+
+
+def test_legacy_manifest_without_crc_still_restores(tmp_path):
+    """Pre-hardening checkpoints lack the crc32 field — they must keep
+    restoring (validation falls back to shape/dtype only)."""
+    d = str(tmp_path / "ckpt")
+    tree = _tree()
+    save(d, 2, tree)
+    mpath = os.path.join(d, "step_000000000002", "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    for meta in manifest["leaves"].values():
+        del meta["crc32"]
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    got, _ = restore(d, 2, _like(tree))
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_latest_quarantines_and_falls_back(tmp_path):
+    d = str(tmp_path / "ckpt")
+    mgr = CheckpointManager(d, keep=3)
+    tree = _tree()
+    for s in (3, 6, 9):
+        mgr.save(s, tree, {"step": s})
+    _flip_payload_byte(d, 9)
+    step, got, host = mgr.restore_latest(_like(tree))
+    assert step == 6 and host["step"] == 6
+    assert [q[0] for q in mgr.quarantined] == [9]
+    assert "crc32" in mgr.quarantined[0][2]
+    # quarantined dir is renamed out of the trust path, payload kept
+    assert os.path.isdir(os.path.join(d, "corrupt.step_000000000009"))
+    assert latest_step(d) == 6
+    assert available_steps(d) == [6, 3]
+
+
+def test_restore_latest_all_corrupt_cold_starts(tmp_path):
+    d = str(tmp_path / "ckpt")
+    mgr = CheckpointManager(d, keep=3)
+    tree = _tree()
+    for s in (3, 6):
+        mgr.save(s, tree)
+    _flip_payload_byte(d, 3)
+    _flip_payload_byte(d, 6)
+    step, got, host = mgr.restore_latest(_like(tree))
+    assert step is None and got is None and host is None
+    assert sorted(q[0] for q in mgr.quarantined) == [3, 6]

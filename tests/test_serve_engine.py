@@ -454,6 +454,147 @@ def test_engine_mixed_sampling_isolation():
     assert res2[0].tokens == res[1].tokens
 
 
+def test_admission_fault_retires_only_failing_request():
+    """A per-request failure during admission (sampling fault) retires that
+    request with finish_reason="error"; batchmates' token streams stay
+    tokenwise exact."""
+    cfg, model, params = _build("gpt2-117m")
+    sched = SchedulerConfig(n_slots=3, cache_len=64, min_prompt_bucket=8,
+                            round_multiple=16, max_buckets=4)
+    engine = InferenceEngine(model, params, sched)
+    orig = engine._first_token
+
+    def failing(req, logits):
+        if req.uid == 1:
+            raise RuntimeError("injected sampling fault")
+        return orig(req, logits)
+
+    engine._first_token = failing
+    reqs = _mixed_requests(cfg, n=4)
+    results = engine.run(reqs)
+    assert results[1].finish_reason == "error"
+    assert results[1].tokens == []
+    for req, res in zip(reqs, results):
+        if req.uid == 1:
+            continue
+        assert res.tokens == _legacy_greedy(model, params, req.tokens,
+                                            req.max_tokens, 64), req.uid
+        assert res.finish_reason == "length"
+    assert engine.stats.slot_errors == 1
+    # the failed slot was freed and recycled
+    assert sorted(engine.scheduler.free) == [0, 1, 2]
+    assert not engine.scheduler.busy
+
+
+def test_shared_prefill_fault_aborts_batch_without_crash():
+    """A failure in the shared (k, bucket) prefill phase aborts all k slots
+    of that admission; the engine still returns a result per uid."""
+    cfg, model, params = _build("gpt2-117m")
+    engine = InferenceEngine(model, params, SchedulerConfig(
+        n_slots=2, cache_len=64, min_prompt_bucket=8, round_multiple=16,
+        max_buckets=4, prefill_batch=2))
+
+    def boom(p, b):
+        raise RuntimeError("injected prefill fault")
+
+    engine._prefill = boom
+    reqs = _mixed_requests(cfg, n=3)
+    results = engine.run(reqs)
+    assert all(r.finish_reason == "error" for r in results)
+    assert engine.stats.slot_errors == len(reqs)
+    assert sorted(engine.scheduler.free) == [0, 1]
+    assert not engine.scheduler.busy
+
+
+def test_on_token_fault_mid_decode_isolates_slot():
+    """A consumer callback raising mid-decode retires only that slot; the
+    rest of the fused batch keeps decoding to completion."""
+    cfg, model, params = _build("gpt2-117m")
+    sched = SchedulerConfig(n_slots=2, cache_len=48, min_prompt_bucket=8,
+                            round_multiple=16, max_buckets=4)
+    engine = InferenceEngine(model, params, sched)
+    rng = np.random.default_rng(21)
+    reqs = [Request(uid=i,
+                    tokens=tuple(int(t) for t in
+                                 rng.integers(0, cfg.vocab_size, size=10)),
+                    max_tokens=6)
+            for i in range(2)]
+    seen = {0: 0, 1: 0}
+
+    def on_token(uid, tok):
+        seen[uid] += 1
+        if uid == 0 and seen[uid] == 3:  # third token: inside _fused_step
+            raise RuntimeError("injected consumer fault")
+
+    results = engine.run(reqs, on_token=on_token)
+    assert results[0].finish_reason == "error"
+    assert 2 <= len(results[0].tokens) <= 3  # stream cut mid-decode
+    oracle = _legacy_greedy(model, params, reqs[1].tokens, 6, 48)
+    assert results[1].tokens == oracle
+    assert results[1].finish_reason == "length"
+    assert engine.stats.slot_errors == 1
+    assert not engine.scheduler.busy
+
+
+def test_bounded_queue_try_submit_sheds():
+    cfg, model, params = _build("gpt2-117m")
+    engine = InferenceEngine(model, params, SchedulerConfig(
+        n_slots=2, cache_len=32, min_prompt_bucket=8, round_multiple=16,
+        max_buckets=4, max_pending=2))
+    reqs = [Request(uid=i, tokens=(1, 2, 3), max_tokens=4) for i in range(3)]
+    assert engine.try_submit(reqs[0])
+    assert engine.try_submit(reqs[1])
+    assert not engine.try_submit(reqs[2])  # at capacity: explicit shed
+    assert engine.stats.shed == 1
+    # malformed requests are a caller bug, not an overload signal
+    engine2 = InferenceEngine(model, params, SchedulerConfig(
+        n_slots=2, cache_len=32, max_pending=2))
+    with pytest.raises(ValueError):
+        engine2.try_submit(Request(uid=9, tokens=(1,) * 40, max_tokens=8))
+    assert engine2.stats.shed == 0
+
+
+def test_scheduler_bounded_queue_semantics():
+    from repro.serve.scheduler import QueueFull
+    s = Scheduler(SchedulerConfig(n_slots=2, cache_len=32,
+                                  min_prompt_bucket=8, round_multiple=16,
+                                  max_buckets=4, max_pending=2))
+    s.submit(Request(uid=0, tokens=(1, 2), max_tokens=4))
+    assert s.has_room
+    s.submit(Request(uid=1, tokens=(1, 2), max_tokens=4))
+    assert not s.has_room
+    with pytest.raises(QueueFull):
+        s.submit(Request(uid=2, tokens=(1, 2), max_tokens=4))
+    # submit_all overload is all-or-nothing: nothing enqueued
+    s2 = Scheduler(SchedulerConfig(n_slots=2, cache_len=32, max_pending=2))
+    with pytest.raises(QueueFull):
+        s2.submit_all([Request(uid=i, tokens=(1, 2), max_tokens=4)
+                       for i in range(3)])
+    assert len(s2.pending) == 0
+
+
+def test_run_respects_bounded_queue_and_completes():
+    """run() owns its request set: with max_pending=1 the backlog drains
+    through the bounded queue without shedding, and every request finishes
+    tokenwise exact."""
+    cfg, model, params = _build("gpt2-117m")
+    engine = InferenceEngine(model, params, SchedulerConfig(
+        n_slots=2, cache_len=32, min_prompt_bucket=8, round_multiple=16,
+        max_buckets=4, max_pending=1))
+    rng = np.random.default_rng(17)
+    reqs = [Request(uid=i,
+                    tokens=tuple(int(t) for t in
+                                 rng.integers(0, cfg.vocab_size, size=9)),
+                    max_tokens=4)
+            for i in range(4)]
+    results = engine.run(reqs)
+    assert engine.stats.shed == 0
+    for req, res in zip(reqs, results):
+        assert res.tokens == _legacy_greedy(model, params, req.tokens, 4, 32)
+        assert res.finish_reason == "length"
+    assert len(engine.scheduler.pending) == 0
+
+
 def test_decode_cache_specs_slot_promotion():
     for arch in ("gpt2-117m", "rwkv6-7b", "zamba2-2.7b"):
         _, model, _ = _build(arch)

@@ -232,6 +232,74 @@ def test_variance_gated_pacing_runs():
     assert not res.diverged
 
 
+def test_watchdog_stop_without_start_is_noop():
+    """Hook orders that skip start (drain/early-stop paths) used to crash
+    on a None _t0; now the unmatched stop records nothing."""
+    wd = StepWatchdog()
+    assert wd.stop() is False
+    assert wd.durations == []
+    wd.start()
+    assert wd.stop() is False  # first sample: no straggler baseline yet
+    assert len(wd.durations) == 1
+    assert wd.stop() is False  # second unmatched stop: still a no-op
+    assert len(wd.durations) == 1
+
+
+def test_retry_policy_exponential_backoff_with_cap():
+    from repro.distributed.fault_tolerance import RetryPolicy
+    pol = RetryPolicy(max_retries=5, backoff_s=0.5, backoff_factor=2.0,
+                      backoff_cap_s=3.0)
+    assert [pol.delay(a) for a in (1, 2, 3, 4, 5)] == \
+        [0.5, 1.0, 2.0, 3.0, 3.0]  # capped from attempt 4
+    assert RetryPolicy(backoff_s=0.0).delay(3) == 0.0  # no-sleep default
+
+
+def test_supervisor_records_failures_and_backs_off():
+    import time as _time
+    from repro.distributed.fault_tolerance import RetryPolicy
+    sup = TrainSupervisor(policy=RetryPolicy(max_retries=2, backoff_s=0.05,
+                                             backoff_factor=2.0))
+    attempts = []
+
+    def run(resume):
+        attempts.append(resume)
+        if len(attempts) < 3:
+            raise RuntimeError(f"boom {len(attempts)}")
+        return "ok"
+
+    t0 = _time.time()
+    assert sup.run(run) == "ok"
+    elapsed = _time.time() - t0
+    assert attempts == [False, True, True]
+    assert sup.restarts == 2
+    assert [f["attempt"] for f in sup.failures] == [1, 2]
+    assert [f["error"] for f in sup.failures] == \
+        ["RuntimeError: boom 1", "RuntimeError: boom 2"]
+    assert all(t0 <= f["time"] <= t0 + elapsed for f in sup.failures)
+    assert elapsed >= 0.05 + 0.1  # 0.05, then 0.05 * 2
+
+
+def test_drain_signal_uninstall_restores_handlers():
+    import signal
+    prev_term = signal.getsignal(signal.SIGTERM)
+    prev_int = signal.getsignal(signal.SIGINT)
+    ds = DrainSignal(install=True)
+    assert signal.getsignal(signal.SIGTERM) == ds._handler
+    ds.uninstall()
+    assert signal.getsignal(signal.SIGTERM) is prev_term
+    assert signal.getsignal(signal.SIGINT) is prev_int
+    ds.uninstall()  # idempotent
+    assert signal.getsignal(signal.SIGTERM) is prev_term
+    # the Trainer teardown path: DrainHook.close() uninstalls, so handlers
+    # never leak across Trainer instances
+    from repro.launch.train import DrainHook
+    ds2 = DrainSignal(install=True)
+    hook = DrainHook(ds2)
+    assert signal.getsignal(signal.SIGTERM) == ds2._handler
+    hook.close()
+    assert signal.getsignal(signal.SIGTERM) is prev_term
+
+
 def test_divergence_detection():
     """Absurd LR must trip the NaN/divergence path, like the paper's 40x-LR
     baseline (Fig. 5)."""
