@@ -17,6 +17,13 @@ Rows (``--json`` via benchmarks.run writes BENCH_serve.json):
   serve/decode_kernel_interpret  fused decode through the flash-decode
                             kernel (interpret mode on CPU — the timing is
                             plumbing, the parity column is the gate)
+  serve/paged_decode        paged KV pool at dense-equivalent page count
+                            (equal slot count, no admission waits): decode
+                            tok/s vs the dense engine (gate: within 15%)
+                            + exact-parity column
+  serve/paged_memory        oversubscribed pool (pool tokens < dense slot
+                            rows): resident KV bytes paged vs dense + the
+                            throughput cost of waiting on pages
 """
 from __future__ import annotations
 
@@ -28,9 +35,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+import dataclasses
+
 from benchmarks.common import BENCH_MODEL, Row
 from repro.models import model_zoo
-from repro.serve import InferenceEngine, Request, SchedulerConfig
+from repro.serve import (InferenceEngine, Request, SchedulerConfig,
+                         cache_nbytes)
 
 PROMPT_LEN = 48
 SLOTS = 4
@@ -118,6 +128,30 @@ def run(quick: bool = False) -> List[Row]:
     dk_match = all(a.tokens == b.tokens for a, b in zip(res_k, results[:4]))
     sk = eng_k.stats
 
+    # paged arm 1: dense-equivalent pool (n_pages=0) — same admission
+    # capacity as the dense engine, so decode tok/s is the apples-to-apples
+    # indirection cost (the gate: within 15% of dense at equal slot count)
+    sched_p = dataclasses.replace(sched, paged=True, page_size=16)
+    eng_p = InferenceEngine(model, params, sched_p)
+    eng_p.run(_requests(cfg.vocab_size, 2, seed=1))  # compile warm-up
+    eng_p.reset_stats()
+    res_p = eng_p.run(reqs)
+    pg_match = all(a.tokens == b.tokens for a, b in zip(res_p, results))
+    sp = eng_p.stats
+
+    # paged arm 2: oversubscribed pool — 14 * 16 = 224 pool tokens vs
+    # 4 * 76 = 304 dense; admission waits on pages, memory is the win
+    sched_m = dataclasses.replace(sched, paged=True, page_size=16,
+                                  n_pages=14)
+    eng_m = InferenceEngine(model, params, sched_m)
+    eng_m.run(_requests(cfg.vocab_size, 2, seed=1))
+    eng_m.reset_stats()
+    res_m = eng_m.run(reqs)
+    pm_match = all(a.tokens == b.tokens for a, b in zip(res_m, results))
+    sm = eng_m.stats
+    dense_kv = cache_nbytes(engine.cache)
+    paged_kv = cache_nbytes(eng_m.cache)
+
     speedup = s.decode_tok_s / max(st_tok_s, 1e-9)
     rows: List[Row] = [
         ("serve/engine_prefill", 1e6 * s.prefill_s / max(s.prefill_tokens, 1),
@@ -143,6 +177,18 @@ def run(quick: bool = False) -> List[Row]:
          f"tok_s={sk.decode_tok_s:.0f} backend=kernel_interpret "
          f"requests={len(sub)} "
          f"parity={'exact' if dk_match else 'MISMATCH'}"),
+        ("serve/paged_decode",
+         1e6 * sp.decode_s / max(sp.generated_tokens - sp.admitted, 1),
+         f"tok_s={sp.decode_tok_s:.0f} "
+         f"vs_dense={sp.decode_tok_s / max(s.decode_tok_s, 1e-9):.2f}x "
+         f"pages={sched_p.resolved_n_pages}x{sched_p.page_size} "
+         f"parity={'exact' if pg_match else 'MISMATCH'}"),
+        ("serve/paged_memory",
+         1e6 * sm.decode_s / max(sm.generated_tokens - sm.admitted, 1),
+         f"tok_s={sm.decode_tok_s:.0f} kv_bytes={paged_kv} "
+         f"dense_bytes={dense_kv} "
+         f"saving={1 - paged_kv / max(dense_kv, 1):.0%} "
+         f"parity={'exact' if pm_match else 'MISMATCH'}"),
     ]
     return rows
 

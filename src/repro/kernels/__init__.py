@@ -72,6 +72,8 @@ def chunk_padding(s: int, chunk: int) -> "tuple[int, int]":
 
 from repro.kernels.flash_attention.ops import flash_attention  # noqa: E402,F401
 from repro.kernels.flash_decode.ops import (flash_decode,  # noqa: E402,F401
+                                            flash_decode_paged,
+                                            flash_decode_paged_partials,
                                             flash_decode_partials)
 from repro.kernels.rwkv6.ops import wkv6  # noqa: E402,F401
 from repro.kernels.ssd.ops import ssd  # noqa: E402,F401

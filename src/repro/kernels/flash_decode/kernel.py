@@ -137,3 +137,121 @@ def flash_decode_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
 def _vmem(shape, dtype):
     from jax.experimental.pallas import tpu as pltpu
     return pltpu.VMEM(shape, dtype)
+
+
+def _paged_decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref,
+                         o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr, *,
+                         page_size: int, max_pages: int, scale: float):
+    bi = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[bi]       # this slot's count of valid cache entries
+    owned = pt_ref[bi, pi] >= 0
+
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)        # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (page_size, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        # global column index of in-page row j is pi * page_size + j
+        col = pi * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        valid = col < length
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = (acc_scr[...] * corr
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    # pages past the valid length and unowned (-1) table entries contribute
+    # nothing; since the page id feeds the index map via scalar prefetch,
+    # their HBM fetch is also elided on TPU (the map clamps -1 to page 0
+    # but this body never reads the block)
+    @pl.when((pi * page_size < length) & owned)
+    def _run():
+        _body()
+
+    @pl.when(pi == max_pages - 1)
+    def _finalize():
+        o_ref[0, 0] = acc_scr[...]
+        m_ref[0, 0] = m_scr[:, 0]
+        l_ref[0, 0] = l_scr[:, 0]
+
+
+def flash_decode_paged_fwd(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, page_table: jax.Array,
+                           lengths: jax.Array, *, interpret: bool = False
+                           ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Page-table-walking flash decode over a shared KV pool.
+
+    q: (B, KV, G, D); k_pool, v_pool: (n_pages, page_size, KV, D);
+    page_table: (B, max_pages) int32 page ids, ``-1`` = unowned;
+    lengths: (B,) int32 counts (slot ``b``'s token ``j`` lives in page
+    ``page_table[b, j // page_size]`` at offset ``j % page_size``).
+
+    The page table and lengths ride scalar prefetch
+    (``PrefetchScalarGridSpec``), so the k/v index maps resolve the *page
+    id* per grid step — the kernel walks each slot's page list and never
+    touches pages the slot doesn't own (ROADMAP TPU caveat (f), solved
+    structurally here: the dense variant can only ``pl.when``-skip its
+    fetches).  Masking and the (m, l, o) online-softmax merge are the
+    dense kernel's, unchanged — they were already page-shape-agnostic.
+    Returns the same fp32 partials as ``flash_decode_fwd``.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    b, kvh, g, d = q.shape
+    page_size = k_pool.shape[1]
+    max_pages = page_table.shape[1]
+    scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(_paged_decode_kernel, page_size=page_size,
+                               max_pages=max_pages, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda b, h, pi, pt, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, d),
+                         lambda b, h, pi, pt, lens:
+                         (jnp.maximum(pt[b, pi], 0), 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, d),
+                         lambda b, h, pi, pt, lens:
+                         (jnp.maximum(pt[b, pi], 0), 0, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b, h, pi, pt, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, g), lambda b, h, pi, pt, lens: (b, h, 0)),
+            pl.BlockSpec((1, 1, g), lambda b, h, pi, pt, lens: (b, h, 0)),
+        ],
+        scratch_shapes=[
+            _vmem((g, 1), jnp.float32),  # m: running row max
+            _vmem((g, 1), jnp.float32),  # l: running row sum
+            _vmem((g, d), jnp.float32),  # acc: weighted values
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kvh, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, kvh, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, kvh, g), jnp.float32),
+        ],
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pool, v_pool)

@@ -20,7 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import chunk_padding, resolve_interpret
-from repro.kernels.flash_decode.kernel import flash_decode_fwd
+from repro.kernels.flash_decode.kernel import (flash_decode_fwd,
+                                               flash_decode_paged_fwd)
 
 
 def _run_kernel(q, k_cache, v_cache, lengths, block_k, interpret):
@@ -61,3 +62,42 @@ def flash_decode_partials(q: jax.Array, k_cache: jax.Array,
     """
     return _run_kernel(q, k_cache, v_cache, lengths, block_k,
                        resolve_interpret(interpret))
+
+
+def _run_paged_kernel(q, k_pool, v_pool, page_table, lengths, interpret):
+    b, h, d = q.shape
+    kvh = k_pool.shape[2]
+    qg = q.reshape(b, kvh, h // kvh, d)
+    return flash_decode_paged_fwd(qg, k_pool, v_pool, page_table, lengths,
+                                  interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def flash_decode_paged(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                       page_table: jax.Array, lengths: jax.Array, *,
+                       interpret: bool | None = None) -> jax.Array:
+    """Normalized paged decode attention: context ``(B, H, D)`` like q.
+
+    Same model-facing layout as ``flash_decode`` except the cache is a
+    shared ``(n_pages, page_size, KV, D)`` pool indexed through
+    ``page_table (B, max_pages)`` (``-1`` = unowned — see serve/paging.py).
+    One page per kv block: no tail padding is ever needed (pages are the
+    block granule), and unowned/past-length pages are skipped fetch-and-all
+    via scalar-prefetch index maps.
+    """
+    o, _, l = _run_paged_kernel(q, k_pool, v_pool, page_table, lengths,
+                                resolve_interpret(interpret))
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    b, h, d = q.shape
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def flash_decode_paged_partials(q: jax.Array, k_pool: jax.Array,
+                                v_pool: jax.Array, page_table: jax.Array,
+                                lengths: jax.Array, *,
+                                interpret: bool | None = None
+                                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Paged variant of ``flash_decode_partials`` (same merge algebra)."""
+    return _run_paged_kernel(q, k_pool, v_pool, page_table, lengths,
+                             resolve_interpret(interpret))

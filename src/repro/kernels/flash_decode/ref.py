@@ -51,3 +51,41 @@ def decode_attention_reference(q: jax.Array, k_cache: jax.Array,
     o, _, l = decode_partials_reference(q, k_cache, v_cache, lengths)
     out = o / jnp.maximum(l[..., None], 1e-30)
     return out.reshape(b, h, d).astype(q.dtype)
+
+
+def gather_pages(pool: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Densify a paged cache: ``(n_pages, page_size, ...)`` pool +
+    ``(B, max_pages)`` page table -> ``(B, max_pages * page_size, ...)``
+    per-slot rows, with unowned (``-1``) pages zeroed.  The jnp fallback
+    read path for paged decode and the oracle the paged kernel is tested
+    against (garbage beyond ``lengths`` is masked downstream either way —
+    the zeroing just keeps the densified cache reproducible)."""
+    b, max_pages = page_table.shape
+    page_size = pool.shape[1]
+    pages = pool[jnp.maximum(page_table, 0)]  # (B, max_pages, page_size, ...)
+    valid = (page_table >= 0).reshape(
+        (b, max_pages) + (1,) * (pool.ndim - 1))
+    pages = jnp.where(valid, pages, 0)
+    return pages.reshape((b, max_pages * page_size) + pool.shape[2:])
+
+
+def paged_decode_partials_reference(q: jax.Array, k_pool: jax.Array,
+                                    v_pool: jax.Array,
+                                    page_table: jax.Array,
+                                    lengths: jax.Array
+                                    ) -> tuple[jax.Array, jax.Array,
+                                               jax.Array]:
+    """Oracle for the paged kernel: gather-then-dense partials."""
+    return decode_partials_reference(q, gather_pages(k_pool, page_table),
+                                     gather_pages(v_pool, page_table),
+                                     lengths)
+
+
+def paged_decode_attention_reference(q: jax.Array, k_pool: jax.Array,
+                                     v_pool: jax.Array,
+                                     page_table: jax.Array,
+                                     lengths: jax.Array) -> jax.Array:
+    """Normalized paged decode attention (gather-then-dense oracle)."""
+    return decode_attention_reference(q, gather_pages(k_pool, page_table),
+                                      gather_pages(v_pool, page_table),
+                                      lengths)

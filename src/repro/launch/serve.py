@@ -100,7 +100,9 @@ def serve_engine(arch: str, use_reduced: bool, n_slots: int, prompt_len: int,
                  seed: int = 0, ragged: bool = True,
                  sampling: SamplingParams = SamplingParams(),
                  sched: SchedulerConfig = None, prefill_batch: int = 1,
-                 decode_backend: str = "", quiet: bool = False):
+                 decode_backend: str = "", paged: bool = False,
+                 page_size: int = 64, n_pages: int = 0,
+                 quiet: bool = False):
     """Continuous-batching serve: the thin driver over InferenceEngine."""
     spec = get_arch(arch)
     cfg = reduce_cfg(spec.model) if use_reduced else spec.model
@@ -110,7 +112,8 @@ def serve_engine(arch: str, use_reduced: bool, n_slots: int, prompt_len: int,
         n_slots=n_slots, cache_len=cache_len,
         min_prompt_bucket=min(16, max(prompt_len // 4, 1)),
         round_multiple=max(prompt_len // 4, 8),
-        prefill_batch=prefill_batch)
+        prefill_batch=prefill_batch, paged=paged,
+        page_size=page_size, n_pages=n_pages)
     engine = InferenceEngine.from_arch(arch, use_reduced=use_reduced,
                                        seed=seed, cfg=sched,
                                        decode_backend=decode_backend or None)
@@ -123,6 +126,13 @@ def serve_engine(arch: str, use_reduced: bool, n_slots: int, prompt_len: int,
     if not quiet:
         print(f"arch={cfg.name} slots={n_slots} requests={n_requests} "
               f"buckets={engine.scheduler.ladder}")
+        if sched.paged:
+            from repro.serve import cache_nbytes
+            print(f"paged:   {sched.resolved_n_pages} pages x "
+                  f"{sched.page_size} tokens "
+                  f"({sched.resolved_n_pages * sched.page_size} pool tokens "
+                  f"vs {n_slots * sched.cache_len} dense; "
+                  f"cache {cache_nbytes(engine.cache)/1e6:.2f} MB)")
         print(f"prefill: {s.prefill_s*1e3:.1f} ms ({s.prefill_tok_s:.0f} "
               f"tok/s over {s.prefill_tokens} prompt tokens)")
         print(f"decode:  {s.decode_s*1e3:.1f} ms, {s.decode_tok_s:.0f} tok/s "
@@ -161,6 +171,14 @@ def main(argv=None) -> int:
                    choices=["", "reference", "kernel", "kernel_interpret"],
                    help="engine: override ModelConfig.decode_backend "
                         "(default: the arch preset's value)")
+    p.add_argument("--paged", action="store_true",
+                   help="engine: paged KV pool + per-slot page tables "
+                        "instead of dense (n_slots, cache_len) rows")
+    p.add_argument("--page-size", type=int, default=64,
+                   help="engine: tokens per KV page (with --paged)")
+    p.add_argument("--n-pages", type=int, default=0,
+                   help="engine: KV pool size in pages (0 = dense-"
+                        "equivalent n_slots * ceil(cache_len/page_size))")
     p.add_argument("--temperature", type=float, default=0.0)
     p.add_argument("--top-k", type=int, default=0)
     p.add_argument("--top-p", type=float, default=1.0)
@@ -177,7 +195,8 @@ def main(argv=None) -> int:
                      cache_len=args.cache_len, seed=args.seed,
                      ragged=not args.uniform, sampling=sp,
                      prefill_batch=args.prefill_batch,
-                     decode_backend=args.decode_backend)
+                     decode_backend=args.decode_backend, paged=args.paged,
+                     page_size=args.page_size, n_pages=args.n_pages)
     return 0
 
 

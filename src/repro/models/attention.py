@@ -23,7 +23,8 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.kernels import on_tpu, resolve_backend
 from repro.kernels.flash_attention.ops import flash_attention
-from repro.kernels.flash_decode.ops import flash_decode
+from repro.kernels.flash_decode.ops import flash_decode, flash_decode_paged
+from repro.kernels.flash_decode.ref import gather_pages
 from repro.models.layers import ParamDef, apply_rope, rms_norm
 
 NEG_INF = -1e30
@@ -170,12 +171,31 @@ def full_attention(params: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
 
 def decode_attention(params: Dict[str, jax.Array], x: jax.Array,
                      cfg: ModelConfig, cache_k: jax.Array, cache_v: jax.Array,
-                     pos: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """One-token decode against a (B, S_max, KV, D) cache at position `pos`.
+                     pos: jax.Array, active: Optional[jax.Array] = None,
+                     page_table: Optional[jax.Array] = None
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode against a KV cache at position `pos`.
 
     ``pos`` is a scalar (whole batch at one position — the legacy static
     path) or a per-row (B,) vector (continuous batching: every slot decodes
     at its own depth).  Returns (out, new_cache_k, new_cache_v).
+
+    Cache layouts:
+
+    * dense (``page_table=None``): ``cache_k``/``cache_v`` are
+      ``(B, S_max, KV, D)`` per-slot rows.
+    * paged (``page_table`` = ``(B, max_pages)`` int32, ``-1`` = unowned):
+      the caches are shared ``(n_pages, page_size, KV, D)`` pools and row
+      ``b``'s token ``j`` lives at ``page_table[b, j // page_size]``,
+      offset ``j % page_size`` (see serve/paging.py).  Paged decode is
+      per-slot single-token only (the fused engine step).
+
+    ``active`` is the per-slot (B,) occupancy mask when given: writes for
+    inactive rows are dropped, so a free/evicted slot's cache never drifts
+    between an evict and the next insert.  Writes past the cache capacity
+    are likewise dropped (scatter ``mode="drop"`` on an out-of-bounds
+    sentinel index), not silently clamped onto the last row — under a page
+    table a clamped runaway position would corrupt another slot's page.
 
     Mask convention — **count of valid entries**: after this step's k/v
     write, a row decoding at position ``p`` has ``p + 1`` valid cache
@@ -186,11 +206,12 @@ def decode_attention(params: Dict[str, jax.Array], x: jax.Array,
     tests/test_flash_decode.py.
 
     ``cfg.decode_backend`` selects the context computation: "reference"
-    (jnp masked softmax over the full cache — the oracle), "kernel" (the
-    Pallas split-KV flash-decode kernel on TPU, reference elsewhere) or
-    "kernel_interpret" (kernel in interpret mode — CPU validation).  The
-    kernel serves the single-token step on both the scalar-pos and
-    per-slot-pos paths; multi-token calls stay on the reference path.
+    (jnp masked softmax over the full cache — the oracle; paged caches are
+    gathered through the page table first), "kernel" (the Pallas split-KV
+    flash-decode kernel on TPU — the page-table-walking variant for paged
+    caches — reference elsewhere) or "kernel_interpret" (kernel in
+    interpret mode — CPU validation).  The kernel serves the single-token
+    step; multi-token calls stay on the reference path.
     """
     b, s_q, h, = x.shape[0], x.shape[1], cfg.n_heads
     pos = jnp.asarray(pos)
@@ -200,16 +221,52 @@ def decode_attention(params: Dict[str, jax.Array], x: jax.Array,
     else:
         positions = pos + jnp.arange(s_q)[None, :]  # (1, s_q) broadcast
     q, k, v = _project_qkv(params, x, cfg, positions)
-    s_max = cache_k.shape[1]
-    if per_slot:
-        # per-row scatter: row b writes its s_q tokens at pos[b]..pos[b]+s_q-1
-        # (vmapped dynamic_update_slice lowers to a scatter — no cache-sized
-        # temporaries; XLA clamps out-of-range starts, and rows past s_max
-        # are empty/retired slots whose contents are never surfaced)
-        def _row_write(c, upd, p):
-            return jax.lax.dynamic_update_slice_in_dim(c, upd, p, axis=0)
-        cache_k = jax.vmap(_row_write)(cache_k, k.astype(cache_k.dtype), pos)
-        cache_v = jax.vmap(_row_write)(cache_v, v.astype(cache_v.dtype), pos)
+
+    if page_table is not None:
+        if not per_slot or s_q != 1:
+            raise ValueError("paged decode is per-slot single-token only "
+                             f"(got pos ndim {pos.ndim}, s_q {s_q})")
+        n_pages, page_size = cache_k.shape[0], cache_k.shape[1]
+        max_pages = page_table.shape[1]
+        pid = page_table[jnp.arange(b),
+                         jnp.minimum(pos // page_size, max_pages - 1)]
+        ok = (pid >= 0) & (pos // page_size < max_pages)
+        if active is not None:
+            ok = ok & active
+        # flatten the pool and scatter at page*page_size + offset; rows
+        # that may not write (inactive, unowned page, past capacity) get
+        # the one-past-the-end sentinel and are dropped
+        flat_idx = jnp.where(ok, pid * page_size + pos % page_size,
+                             n_pages * page_size)
+
+        def _pool_write(c, upd):
+            fc = c.reshape((n_pages * page_size,) + c.shape[2:])
+            fc = fc.at[flat_idx].set(upd.astype(c.dtype), mode="drop")
+            return fc.reshape(c.shape)
+        cache_k = _pool_write(cache_k, k[:, 0])
+        cache_v = _pool_write(cache_v, v[:, 0])
+    elif per_slot:
+        s_max = cache_k.shape[1]
+        if s_q == 1:
+            ok = pos < s_max
+            if active is not None:
+                ok = ok & active
+            idx = jnp.where(ok, pos, s_max)  # OOB sentinel -> dropped
+            rows = jnp.arange(b)
+            cache_k = cache_k.at[rows, idx].set(
+                k[:, 0].astype(cache_k.dtype), mode="drop")
+            cache_v = cache_v.at[rows, idx].set(
+                v[:, 0].astype(cache_v.dtype), mode="drop")
+        else:
+            # multi-token per-slot replay: row b writes its s_q tokens at
+            # pos[b]..pos[b]+s_q-1 (vmapped dynamic_update_slice lowers to
+            # a scatter; callers keep pos + s_q <= s_max)
+            def _row_write(c, upd, p):
+                return jax.lax.dynamic_update_slice_in_dim(c, upd, p, axis=0)
+            cache_k = jax.vmap(_row_write)(cache_k, k.astype(cache_k.dtype),
+                                           pos)
+            cache_v = jax.vmap(_row_write)(cache_v, v.astype(cache_v.dtype),
+                                           pos)
     else:
         cache_k = jax.lax.dynamic_update_slice_in_dim(
             cache_k, k.astype(cache_k.dtype), pos, axis=1)
@@ -225,12 +282,22 @@ def decode_attention(params: Dict[str, jax.Array], x: jax.Array,
         # counts of valid entries per row (the token just written included)
         lengths = (pos + 1 if per_slot
                    else jnp.broadcast_to(pos + 1, (b,))).astype(jnp.int32)
-        ctx = flash_decode(q[:, 0], cache_k, cache_v, lengths,
-                           interpret=interpret)[:, None]
+        if page_table is not None:
+            ctx = flash_decode_paged(q[:, 0], cache_k, cache_v, page_table,
+                                     lengths, interpret=interpret)[:, None]
+        else:
+            ctx = flash_decode(q[:, 0], cache_k, cache_v, lengths,
+                               interpret=interpret)[:, None]
     else:
+        if page_table is not None:
+            kc = gather_pages(cache_k, page_table)
+            vc = gather_pages(cache_v, page_table)
+        else:
+            kc, vc = cache_k, cache_v
+        s_max = kc.shape[1]
         scale = 1.0 / math.sqrt(d)
         qg = q.reshape(b, s_q, kvh, g, d) * scale
-        s = jnp.einsum("bqkgd,bjkd->bkgqj", qg, cache_k).astype(jnp.float32)
+        s = jnp.einsum("bqkgd,bjkd->bkgqj", qg, kc).astype(jnp.float32)
         counts = positions + 1  # (B, s_q) or (1, s_q): valid-entry counts
         if per_slot:
             valid = jnp.arange(s_max)[None, None, :] < counts[:, :, None]
@@ -239,8 +306,7 @@ def decode_attention(params: Dict[str, jax.Array], x: jax.Array,
             valid = jnp.arange(s_max)[None, :] < counts[0][:, None]
             s = jnp.where(valid[None, None, None], s, NEG_INF)
         p = jax.nn.softmax(s, axis=-1)
-        ctx = jnp.einsum("bkgqj,bjkd->bkgqd", p.astype(cache_v.dtype),
-                         cache_v)
+        ctx = jnp.einsum("bkgqj,bjkd->bkgqd", p.astype(vc.dtype), vc)
         ctx = ctx.transpose(0, 3, 1, 2, 4).reshape(b, s_q, h, d)
     out = jnp.einsum("bshk,hkd->bsd", ctx, params["wo"].astype(x.dtype))
     return out, cache_k, cache_v

@@ -203,6 +203,29 @@ def round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+def advance_pos(pos: jax.Array, n: int, active=None, limit=None) -> jax.Array:
+    """Advance decode position(s) by ``n`` generated tokens.
+
+    Per-slot serving rules (both are slot-lifecycle guards — an idle slot's
+    position used to grow without bound, one step per fused decode, until
+    its cache writes walked past the row):
+
+    * ``active`` (per-slot bool mask): inactive (free/evicted) slots stay
+      frozen at their current position instead of drifting.
+    * ``limit`` (cache capacity): positions saturate at ``limit`` rather
+      than growing past it — the matching cache writes are dropped, not
+      clamped onto the last row (see ``decode_attention``).
+
+    With both ``None`` this is the legacy scalar path: ``pos + n`` exactly
+    (decode-replay depends on exact arithmetic)."""
+    new = pos + n
+    if limit is not None:
+        new = jnp.minimum(new, limit)
+    if active is not None:
+        new = jnp.where(active, new, pos)
+    return new
+
+
 def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
                        mask: Optional[jax.Array], vocab_size: int
                        ) -> Tuple[jax.Array, jax.Array]:

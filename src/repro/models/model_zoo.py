@@ -68,11 +68,14 @@ def active_param_count(cfg: ModelConfig) -> int:
 def decode_cache_axes(model) -> Any:
     """Logical-axes tree for the slot cache: scalar bookkeeping leaves
     (``pos``) are promoted to per-slot vectors, so every leaf carries the
-    "batch" (slot) axis."""
+    "batch" (slot) axis.  Includes the per-slot ``active`` occupancy leaf
+    (see ``decode_cache_specs``)."""
     def one(ax):
         return ax if "batch" in ax else ("batch",) + ax
-    return jax.tree_util.tree_map(one, model.cache_axes(),
+    axes = jax.tree_util.tree_map(one, model.cache_axes(),
                                   is_leaf=is_axes_leaf)
+    axes["active"] = ("batch",)
+    return axes
 
 
 def decode_cache_specs(model, n_slots: int, cache_len: int) -> Any:
@@ -82,6 +85,9 @@ def decode_cache_specs(model, n_slots: int, cache_len: int) -> Any:
     recurrent states and the Zamba-2 hybrid cache all come out with the
     batch dim sized to ``n_slots`` and the scalar ``pos`` leaf promoted to
     a per-slot (n_slots,) vector (each slot decodes at its own depth).
+    A per-slot (n_slots,) bool ``active`` occupancy leaf rides along:
+    models freeze ``pos`` (and drop cache writes) for inactive slots, so a
+    free slot's state can never drift between an evict and the next insert.
     """
     shapes = model.cache_shapes(n_slots, cache_len)
     axes = model.cache_axes()
@@ -91,7 +97,9 @@ def decode_cache_specs(model, n_slots: int, cache_len: int) -> Any:
             return sds
         return jax.ShapeDtypeStruct((n_slots,) + sds.shape, sds.dtype)
 
-    return jax.tree_util.tree_map(one, axes, shapes, is_leaf=is_axes_leaf)
+    specs = jax.tree_util.tree_map(one, axes, shapes, is_leaf=is_axes_leaf)
+    specs["active"] = jax.ShapeDtypeStruct((n_slots,), jnp.bool_)
+    return specs
 
 
 def init_decode_cache(model, n_slots: int, cache_len: int) -> Any:

@@ -20,8 +20,9 @@ from repro.configs.base import ModelConfig
 from repro.distributed.sharding import constrain
 from repro.models import attention as attn_mod
 from repro.models.layers import (
-    ParamDef, apply_norm, cast, cross_entropy_loss, maybe_checkpoint,
-    maybe_scan, mlp_def, mlp_apply, norm_def, round_up, stack_defs)
+    ParamDef, advance_pos, apply_norm, cast, cross_entropy_loss,
+    maybe_checkpoint, maybe_scan, mlp_def, mlp_apply, norm_def, round_up,
+    stack_defs)
 from repro.models.transformer import DenseLM, _logits, embed_inputs
 
 
@@ -273,6 +274,8 @@ class MoELM(DenseLM):
         cfg = self.cfg
         params = cast(params, self.dtype)
         pos = cache["pos"]
+        active = cache.get("active")
+        page_table = cache.get("page_table")
         x, _ = embed_inputs(params, {"tokens": tokens}, cfg, self.dtype,
                             start_pos=pos)
 
@@ -280,7 +283,9 @@ class MoELM(DenseLM):
             x = carry
             lp, ck, cv = inp
             h = apply_norm(lp["ln1"], x, cfg.norm, cfg.norm_eps)
-            a, ck, cv = attn_mod.decode_attention(lp["attn"], h, cfg, ck, cv, pos)
+            a, ck, cv = attn_mod.decode_attention(lp["attn"], h, cfg, ck, cv,
+                                                  pos, active=active,
+                                                  page_table=page_table)
             x = x + a
             h = apply_norm(lp["ln2"], x, cfg.norm, cfg.norm_eps)
             y, _aux = apply_moe_ffn(lp["moe"], h, cfg)
@@ -291,4 +296,15 @@ class MoELM(DenseLM):
             body, x, (params["layers"], cache["k"], cache["v"]),
             self.unroll_layers)
         logits = _logits(params, x, cfg)[:, 0]
-        return logits, {"k": ks, "v": vs, "pos": pos + tokens.shape[1]}
+        if page_table is not None:
+            cap = page_table.shape[1] * cache["k"].shape[2]
+        else:
+            cap = cache["k"].shape[2]
+        new_pos = advance_pos(pos, tokens.shape[1], active,
+                              limit=cap if pos.ndim else None)
+        out = {"k": ks, "v": vs, "pos": new_pos}
+        if active is not None:
+            out["active"] = active
+        if page_table is not None:
+            out["page_table"] = page_table
+        return logits, out

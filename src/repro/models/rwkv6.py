@@ -22,7 +22,7 @@ from repro.distributed.sharding import constrain
 from repro.kernels import resolve_backend
 from repro.kernels.rwkv6.ops import wkv6
 from repro.models.layers import (
-    ParamDef, apply_norm, cast, cross_entropy_loss, layer_norm,
+    ParamDef, advance_pos, apply_norm, cast, cross_entropy_loss, layer_norm,
     maybe_checkpoint, maybe_scan, norm_def, round_up, stack_defs)
 from repro.models.transformer import _logits, embed_inputs
 
@@ -340,7 +340,10 @@ class RWKV6LM:
         x, new_cache = maybe_scan(body, x, (params["layers"], layer_cache),
                                   self.unroll_layers)
         logits = _logits(params, x[:, None, :], cfg)[:, 0]
-        new_cache["pos"] = cache["pos"] + tokens.shape[1]
+        active = cache.get("active")
+        new_cache["pos"] = advance_pos(cache["pos"], tokens.shape[1], active)
+        if active is not None:
+            new_cache["active"] = active
         return logits, new_cache
 
     def prefill(self, params, batch, cache_len: Optional[int] = None):

@@ -18,8 +18,9 @@ from repro.configs.base import ModelConfig
 from repro.distributed.sharding import constrain
 from repro.models import attention as attn_mod
 from repro.models.layers import (
-    ParamDef, apply_norm, cast, cross_entropy_loss, maybe_checkpoint,
-    maybe_scan, mlp_def, mlp_apply, norm_def, round_up, stack_defs)
+    ParamDef, advance_pos, apply_norm, cast, cross_entropy_loss,
+    maybe_checkpoint, maybe_scan, mlp_def, mlp_apply, norm_def, round_up,
+    stack_defs)
 
 
 def dense_defs(cfg: ModelConfig) -> Dict[str, Any]:
@@ -154,10 +155,18 @@ class DenseLM:
 
     def decode(self, params, cache, tokens):
         """One decode step: tokens (B, 1) against the cache. Returns
-        (logits (B, V), new cache)."""
+        (logits (B, V), new cache).
+
+        Slot caches may carry two optional leaves the legacy scalar-pos
+        cache lacks: ``active`` (per-slot occupancy — inactive slots freeze
+        their position and drop cache writes) and ``page_table`` (the KV
+        leaves are shared paged pools — see serve/paging.py); both pass
+        through unchanged."""
         cfg = self.cfg
         params = cast(params, self.dtype)
         pos = cache["pos"]
+        active = cache.get("active")
+        page_table = cache.get("page_table")
         x, _ = embed_inputs(params, {"tokens": tokens}, cfg, self.dtype,
                             start_pos=pos)
 
@@ -165,7 +174,9 @@ class DenseLM:
             x = carry
             lp, ck, cv = inp
             h = apply_norm(lp["ln1"], x, cfg.norm, cfg.norm_eps)
-            a, ck, cv = attn_mod.decode_attention(lp["attn"], h, cfg, ck, cv, pos)
+            a, ck, cv = attn_mod.decode_attention(lp["attn"], h, cfg, ck, cv,
+                                                  pos, active=active,
+                                                  page_table=page_table)
             x = x + a
             h = apply_norm(lp["ln2"], x, cfg.norm, cfg.norm_eps)
             x = x + mlp_apply(lp["mlp"], h, cfg.mlp)
@@ -175,7 +186,18 @@ class DenseLM:
             body, x, (params["layers"], cache["k"], cache["v"]),
             self.unroll_layers)
         logits = _logits(params, x, cfg)[:, 0]
-        return logits, {"k": ks, "v": vs, "pos": pos + tokens.shape[1]}
+        if page_table is not None:
+            cap = page_table.shape[1] * cache["k"].shape[2]  # pages * page_sz
+        else:
+            cap = cache["k"].shape[2]  # dense per-slot row length
+        new_pos = advance_pos(pos, tokens.shape[1], active,
+                              limit=cap if pos.ndim else None)
+        out = {"k": ks, "v": vs, "pos": new_pos}
+        if active is not None:
+            out["active"] = active
+        if page_table is not None:
+            out["page_table"] = page_table
+        return logits, out
 
     # -- specs ---------------------------------------------------------------
     def cache_shapes(self, batch_size: int, seq_len: int):

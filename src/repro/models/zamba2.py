@@ -21,8 +21,9 @@ from repro.distributed.sharding import constrain
 from repro.models import attention as attn_mod
 from repro.models import mamba2
 from repro.models.layers import (
-    ParamDef, apply_norm, cast, cross_entropy_loss, maybe_checkpoint,
-    maybe_scan, mlp_def, mlp_apply, norm_def, round_up, stack_defs)
+    ParamDef, advance_pos, apply_norm, cast, cross_entropy_loss,
+    maybe_checkpoint, maybe_scan, mlp_def, mlp_apply, norm_def, round_up,
+    stack_defs)
 from repro.models.transformer import _logits, embed_inputs
 
 
@@ -187,6 +188,8 @@ class Zamba2LM:
         cfg = self.cfg
         params = cast(params, self.dtype)
         pos = cache["pos"]
+        active = cache.get("active")
+        page_table = cache.get("page_table")
         x, _ = embed_inputs(params, {"tokens": tokens}, cfg, self.dtype,
                             start_pos=pos)
         grouped = _group_tree(params["mamba_layers"], self.n_groups)
@@ -205,7 +208,8 @@ class Zamba2LM:
                                    self.unroll_layers)
             h = apply_norm(params["shared"]["ln1"], x, cfg.norm, cfg.norm_eps)
             a, ck, cv = attn_mod.decode_attention(
-                params["shared"]["attn"], h, cfg, ck, cv, pos)
+                params["shared"]["attn"], h, cfg, ck, cv, pos,
+                active=active, page_table=page_table)
             x = x + a
             h = apply_norm(params["shared"]["ln2"], x, cfg.norm, cfg.norm_eps)
             x = x + mlp_apply(params["shared"]["mlp"], h, cfg.mlp)
@@ -218,5 +222,16 @@ class Zamba2LM:
             lambda t: t.reshape((t.shape[0] * t.shape[1],) + t.shape[2:]),
             new_mamba)
         logits = _logits(params, x, cfg)[:, 0]
-        return logits, {"mamba": new_mamba, "attn_k": ks, "attn_v": vs,
-                        "pos": pos + tokens.shape[1]}
+        if page_table is not None:
+            cap = page_table.shape[1] * cache["attn_k"].shape[2]
+        else:
+            cap = cache["attn_k"].shape[2]
+        new_pos = advance_pos(pos, tokens.shape[1], active,
+                              limit=cap if pos.ndim else None)
+        out = {"mamba": new_mamba, "attn_k": ks, "attn_v": vs,
+               "pos": new_pos}
+        if active is not None:
+            out["active"] = active
+        if page_table is not None:
+            out["page_table"] = page_table
+        return logits, out

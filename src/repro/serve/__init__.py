@@ -7,6 +7,8 @@ protocol for every backbone (transformer / MoE / Mamba-2 / RWKV-6 / Zamba-2).
     results = engine.run([Request(uid=0, tokens=(1, 2, 3), max_tokens=16)])
 """
 from repro.serve.engine import EngineStats, InferenceEngine
+from repro.serve.paging import (PageAllocator, PagedDecodeState,
+                                PageExhausted, cache_nbytes)
 from repro.serve.sampling import sample_tokens
 from repro.serve.scheduler import Scheduler, SchedulerConfig, prefill_split
 from repro.serve.state import DecodeState, SlotDecodeState
@@ -14,6 +16,7 @@ from repro.serve.types import GenerationResult, Request, SamplingParams
 
 __all__ = [
     "DecodeState", "EngineStats", "GenerationResult", "InferenceEngine",
-    "Request", "SamplingParams", "Scheduler", "SchedulerConfig",
-    "SlotDecodeState", "prefill_split", "sample_tokens",
+    "PageAllocator", "PagedDecodeState", "PageExhausted", "Request",
+    "SamplingParams", "Scheduler", "SchedulerConfig", "SlotDecodeState",
+    "cache_nbytes", "prefill_split", "sample_tokens",
 ]

@@ -23,7 +23,7 @@ import time
 from collections import deque
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Deque, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -40,6 +40,12 @@ from repro.serve.types import GenerationResult, Request
 OnToken = Callable[[int, int], None]  # (request uid, token id)
 
 
+# per-step decode latency samples kept for percentiles: a bounded ring,
+# not a list — one float per fused step forever is a slow leak at
+# production rates (a week at 100 steps/s is ~500 MB of pure bookkeeping)
+STEP_TIME_WINDOW = 2048
+
+
 @dataclass
 class EngineStats:
     """Host wall-clock accounting for one engine lifetime."""
@@ -50,7 +56,8 @@ class EngineStats:
     decode_steps: int = 0
     generated_tokens: int = 0
     admitted: int = 0
-    step_times: List[float] = field(default_factory=list)
+    step_times: Deque[float] = field(
+        default_factory=lambda: deque(maxlen=STEP_TIME_WINDOW))
     # containment accounting: slots retired with reason="error" (the batch
     # kept going) and submissions shed at the bounded queue
     slot_errors: int = 0
@@ -69,10 +76,15 @@ class EngineStats:
                 / max(self.decode_s, 1e-9))
 
     def latency_percentile(self, p: float) -> float:
-        """p-th percentile of per-step (== per-token) decode latency, s."""
+        """p-th percentile of per-step (== per-token) decode latency, s.
+
+        Exact for runs up to ``STEP_TIME_WINDOW`` decode steps (every
+        sample is still in the ring); beyond that it is the percentile of
+        the trailing window — the production-relevant figure anyway."""
         if not self.step_times:
             return 0.0
-        return float(np.percentile(np.asarray(self.step_times), p))
+        return float(np.percentile(
+            np.fromiter(self.step_times, np.float64), p))
 
 
 class InferenceEngine:
@@ -83,7 +95,17 @@ class InferenceEngine:
         self.model = model
         self.params = params
         self.cfg = cfg or SchedulerConfig()
-        self.state = SlotDecodeState(model)
+        if self.cfg.paged:
+            from repro.serve.paging import PagedDecodeState
+            self.state = PagedDecodeState(
+                model, page_size=self.cfg.page_size,
+                n_pages=self.cfg.resolved_n_pages)
+            # admission page budget: a request is only admitted once its
+            # worst case (prompt + max_tokens) is reserved in the pool
+            self._reserve = self.state.try_reserve
+        else:
+            self.state = SlotDecodeState(model)
+            self._reserve = None
         self.scheduler = Scheduler(self.cfg)
         self.cache = self.state.init_slots(self.cfg.n_slots,
                                            self.cfg.cache_len)
@@ -158,6 +180,9 @@ class InferenceEngine:
             logits, kcache = self._prefill(self.params, {"tokens": toks})
         except Exception:  # noqa: BLE001 — shared phase: all k slots fail
             for slot, req in admissions:
+                # evict even though nothing was inserted: it releases the
+                # slot's admission page reservation (no-op for dense)
+                self.cache = self.state.evict(self.cache, slot)
                 self.scheduler.abort(slot, req)
                 self.stats.slot_errors += 1
             return
@@ -199,11 +224,11 @@ class InferenceEngine:
         self.stats.generated_tokens += n_ok
         for i, (slot, req) in enumerate(admissions):
             if failed[i]:
-                # the failing request retires alone; if its cache row was
-                # already inserted (sampling failed after insert_many) the
-                # row is cleared — the rest of the batch proceeds
-                if i in live:
-                    self.cache = self.state.evict(self.cache, slot)
+                # the failing request retires alone; the evict clears its
+                # cache row if one was inserted (sampling failed after
+                # insert_many) and releases its page reservation either
+                # way — the rest of the batch proceeds
+                self.cache = self.state.evict(self.cache, slot)
                 self.scheduler.abort(slot, req)
                 self.stats.slot_errors += 1
                 continue
@@ -296,7 +321,8 @@ class InferenceEngine:
             while backlog and self.scheduler.has_room:
                 self.scheduler.enqueue_validated(backlog.popleft())
             while True:
-                adm = self.scheduler.next_admission(self.cfg.prefill_batch)
+                adm = self.scheduler.next_admission(self.cfg.prefill_batch,
+                                                    reserve=self._reserve)
                 if not adm:
                     break
                 self._admit_batch(adm, on_token)

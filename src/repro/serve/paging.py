@@ -1,0 +1,440 @@
+"""Paged slot caches: block-table KV indirection behind ``DecodeState``.
+
+Dense ``SlotDecodeState`` rows reserve ``cache_len`` tokens of KV for every
+slot — worst-case memory for every request, which is exactly the
+sequence-length-heterogeneity cost the paper measures at training time
+showing up at serving time.  Here the attention KV leaves become a shared
+pool of fixed-size **pages** plus a per-slot **page table** (vLLM-style
+block tables):
+
+* pool leaf:   dense ``(L, n_slots, cache_len, KV, D)`` becomes
+  ``(L, n_pages, page_size, KV, D)`` — one allocation for the whole engine,
+  sized to what requests actually use (``n_pages * page_size`` tokens)
+  instead of what they might (``n_slots * cache_len``).
+* page table:  ``(n_slots, pages_per_slot)`` int32, entry ``-1`` = unowned.
+  Allocation is on-insert (prompt pages), grow-on-decode (one page when a
+  slot's position crosses a page boundary), free-on-evict.
+* admission:   a request *reserves* ``ceil((prompt_len + max_tokens) /
+  page_size)`` pages before it is admitted, so grow-on-decode can never
+  fail mid-flight — page exhaustion is an admission-time wait, not a
+  decode-time fault (see ``Scheduler.next_admission``'s ``reserve`` hook).
+
+Recurrent O(1) state leaves (Mamba-2 ``ssm_state``/conv windows, RWKV-6
+``wkv``/shift buffers) stay dense inside the same pytree — they are
+``(n_slots, ...)`` with no sequence axis, so paging buys nothing today
+(conv-window paging is a recorded follow-on).  Only leaves whose
+``cache_axes`` contain ``"seq"`` are paged.
+
+The engine/scheduler call sites do not change: ``PagedDecodeState``
+implements the same ``init_slots``/``insert``/``insert_many``/``evict``/
+``gather``/``decode`` protocol, and ``model.decode`` routes attention
+through the page table when the cache carries one (gather-based reference
+path, or the page-table-walking flash-decode kernel — see
+``kernels.flash_decode``).
+"""
+from __future__ import annotations
+
+from typing import Any, List
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model_zoo
+from repro.serve.state import SlotDecodeState, _tree_map_axes
+
+
+class PageExhausted(RuntimeError):
+    """No free page satisfies an allocation.
+
+    Under reservation-gated admission this is a caller bug (allocating for
+    a slot that never reserved, or past its reservation), never a mid-decode
+    overload: admission waits until the pool can cover a request's worst
+    case before the request occupies a slot."""
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``n_tokens`` cache entries."""
+    return -(-max(int(n_tokens), 0) // page_size)
+
+
+class PageAllocator:
+    """Host-side free-list page allocator with per-slot page tables.
+
+    Invariants (pinned by the property test in tests/test_paging.py):
+
+    * every page is either on the free list or owned by exactly one slot;
+    * ``table[slot, :owned[slot]]`` are that slot's pages in position order
+      (page ``i`` holds token indices ``[i*page_size, (i+1)*page_size)``),
+      the rest of the row is ``-1``;
+    * ``sum(max(owned, reserved)) <= n_pages`` — reservations are honored,
+      so a reserved slot's ``grow`` always finds a free page.
+    """
+
+    def __init__(self, n_pages: int, page_size: int, n_slots: int,
+                 pages_per_slot: int):
+        if n_pages < 1 or page_size < 1 or pages_per_slot < 1:
+            raise ValueError(f"need n_pages, page_size, pages_per_slot >= 1, "
+                             f"got {n_pages}, {page_size}, {pages_per_slot}")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.n_slots = n_slots
+        self.pages_per_slot = pages_per_slot
+        self.free_pages: List[int] = list(range(n_pages))[::-1]  # pop -> 0
+        self.table = np.full((n_slots, pages_per_slot), -1, np.int32)
+        self.owned = np.zeros(n_slots, np.int64)
+        self.reserved = np.zeros(n_slots, np.int64)
+
+    # -- accounting ---------------------------------------------------------
+    @property
+    def committed(self) -> int:
+        """Pages promised: per slot the max of owned and reserved."""
+        return int(np.maximum(self.owned, self.reserved).sum())
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.n_pages - len(self.free_pages)
+
+    def occupancy(self) -> float:
+        return self.pages_in_use / self.n_pages
+
+    # -- reservation (admission control) ------------------------------------
+    def can_reserve(self, slot: int, n_pages: int) -> bool:
+        if n_pages > self.pages_per_slot:
+            return False
+        cur = int(max(self.owned[slot], self.reserved[slot]))
+        new = int(max(self.owned[slot], n_pages))
+        return self.committed - cur + new <= self.n_pages
+
+    def reserve(self, slot: int, n_pages: int) -> bool:
+        """Reserve ``n_pages`` for ``slot``; False if the pool cannot honor
+        it (the request should wait, not be admitted)."""
+        if not self.can_reserve(slot, n_pages):
+            return False
+        self.reserved[slot] = n_pages
+        return True
+
+    # -- allocation ----------------------------------------------------------
+    def _grow_one(self, slot: int) -> None:
+        if self.owned[slot] >= self.pages_per_slot:
+            raise PageExhausted(f"slot {slot}: page table full "
+                                f"({self.pages_per_slot} pages)")
+        if self.owned[slot] >= self.reserved[slot] \
+                and self.committed >= self.n_pages:
+            raise PageExhausted(
+                f"slot {slot}: pool committed ({self.committed}/"
+                f"{self.n_pages} pages) and slot has no reservation left")
+        assert self.free_pages, "free list empty with headroom: invariant bug"
+        page = self.free_pages.pop()
+        self.table[slot, self.owned[slot]] = page
+        self.owned[slot] += 1
+
+    def allocate(self, slot: int, n_tokens: int) -> None:
+        """Ensure ``slot`` owns pages covering token indices
+        ``[0, n_tokens)`` (idempotent; allocates only the deficit)."""
+        need = pages_for(n_tokens, self.page_size)
+        while self.owned[slot] < need:
+            self._grow_one(slot)
+
+    def free_slot(self, slot: int) -> None:
+        """Return all of ``slot``'s pages and drop its reservation."""
+        for i in range(int(self.owned[slot])):
+            self.free_pages.append(int(self.table[slot, i]))
+        self.table[slot, :] = -1
+        self.owned[slot] = 0
+        self.reserved[slot] = 0
+
+    def check(self) -> None:
+        """Assert the ownership invariants (test hook)."""
+        owned = [int(p) for row, n in zip(self.table, self.owned)
+                 for p in row[:int(n)]]
+        assert len(set(owned)) == len(owned), "page double-owned"
+        assert not set(owned) & set(self.free_pages), "owned page on free list"
+        assert sorted(owned + self.free_pages) == list(range(self.n_pages)), \
+            "pages leaked"
+        assert all((row[int(n):] == -1).all()
+                   for row, n in zip(self.table, self.owned))
+        assert self.committed <= self.n_pages
+
+
+def paged_cache_specs(model, n_slots: int, cache_len: int, page_size: int,
+                      n_pages: int) -> Any:
+    """ShapeDtypeStruct tree for the paged slot cache.
+
+    Leaves with a ``"seq"`` axis swap their ``(batch, seq)`` dims for
+    ``(n_pages, page_size)`` pools; everything else matches
+    ``model_zoo.decode_cache_specs`` (per-slot ``pos``/``active``
+    bookkeeping, dense recurrent leaves).  The ``page_table`` leaf is added
+    by ``PagedDecodeState.init_slots``.
+    """
+    axes = model_zoo.decode_cache_axes(model)
+    dense = model_zoo.decode_cache_specs(model, n_slots, cache_len)
+
+    def one(ax, sds):
+        if "seq" not in ax:
+            return sds
+        bi, si = ax.index("batch"), ax.index("seq")
+        assert si == bi + 1, f"paging assumes seq right after batch, got {ax}"
+        shape = list(sds.shape)
+        shape[bi], shape[si] = n_pages, page_size
+        return jax.ShapeDtypeStruct(tuple(shape), sds.dtype)
+
+    return _tree_map_axes(one, axes, dense)
+
+
+class PagedDecodeState(SlotDecodeState):
+    """``DecodeState`` over a paged KV pool + per-slot page tables.
+
+    Protocol-compatible with ``SlotDecodeState`` (the engine/scheduler call
+    sites are unchanged); extra surface: ``try_reserve`` (the admission
+    page-budget hook) and the ``PageAllocator`` at ``self.alloc``.  The
+    prefill/replay side still runs on dense batch=1 caches (``row``/
+    ``stack_rows``/replay-``decode`` are inherited) — paging starts at
+    ``insert``, where prompt rows scatter into owned pages.
+    """
+
+    def __init__(self, model, page_size: int, n_pages: int):
+        super().__init__(model)
+        self.page_size = int(page_size)
+        self.n_pages = int(n_pages)
+        saxes = dict(self._axes)
+        saxes["active"] = ()
+        n_pool = self.n_pages
+        ps = self.page_size
+
+        def _page_ids(table_rows):
+            # -1 (unowned) -> one-past-the-pool sentinel: scatters drop it
+            return jnp.where(table_rows >= 0, table_rows, n_pool)
+
+        def _to_pages(ax, p, pps, dtype):
+            """(..., S, ...) prefill leaf -> (..., pps, ps, ...) pages."""
+            si = ax.index("batch")  # batch squeezed/kept: seq sits here
+            cap = pps * ps
+            pad = cap - p.shape[si]
+            if pad:
+                width = [(0, 0)] * p.ndim
+                width[si] = (0, pad)
+                p = jnp.pad(p, width)
+            shape = p.shape[:si] + (pps, ps) + p.shape[si + 1:]
+            return p.reshape(shape).astype(dtype)
+
+        def pinsert_fn(cache, slot, one):
+            cache = dict(cache)
+            table = cache.pop("page_table")
+            pps = table.shape[1]
+            pids = _page_ids(table[slot])  # (pps,)
+
+            def leaf(ax, c, p):
+                if "seq" in ax:
+                    bi = ax.index("batch")
+                    pages = _to_pages(ax, jnp.squeeze(p, axis=bi), pps,
+                                      c.dtype)
+                    idx = (slice(None),) * bi + (pids,)
+                    return c.at[idx].set(pages, mode="drop")
+                if "batch" in ax:
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        c, p.astype(c.dtype), slot, axis=ax.index("batch"))
+                return jax.lax.dynamic_update_slice_in_dim(
+                    c, jnp.asarray(p)[None].astype(c.dtype), slot, axis=0)
+
+            out = _tree_map_axes(leaf, saxes, cache, one)
+            out["page_table"] = table
+            return out
+
+        def pinsert_many_fn(cache, slots, rows):
+            cache = dict(cache)
+            table = cache.pop("page_table")
+            pps = table.shape[1]
+            k = slots.shape[0]
+            pids = _page_ids(table[slots])  # (k, pps)
+
+            def leaf(ax, c, p):
+                if "seq" in ax:
+                    bi = ax.index("batch")
+                    # p: (..., k, S, ...) -> (..., k, pps, ps, ...)
+                    cap = pps * ps
+                    si = bi + 1
+                    pad = cap - p.shape[si]
+                    if pad:
+                        width = [(0, 0)] * p.ndim
+                        width[si] = (0, pad)
+                        p = jnp.pad(p, width)
+                    shape = p.shape[:si] + (pps, ps) + p.shape[si + 1:]
+                    pages = p.reshape(shape).astype(c.dtype)
+                    idx = (slice(None),) * bi + (pids,)
+                    return c.at[idx].set(pages, mode="drop")
+                if "batch" in ax:
+                    bax = ax.index("batch")
+                    cm = jnp.moveaxis(c, bax, 0)
+                    pm = jnp.moveaxis(p, bax, 0).astype(c.dtype)
+                    return jnp.moveaxis(cm.at[slots].set(pm), 0, bax)
+                p = jnp.asarray(p).astype(c.dtype)
+                if p.ndim < c.ndim:
+                    p = jnp.broadcast_to(p, (k,) + c.shape[1:])
+                return c.at[slots].set(p)
+
+            out = _tree_map_axes(leaf, saxes, cache, rows)
+            out["page_table"] = table
+            return out
+
+        def pevict_fn(cache, slot):
+            cache = dict(cache)
+            table = cache.pop("page_table")
+
+            def leaf(ax, c):
+                if "batch" in ax or "seq" in ax:
+                    return c  # pages return to the free list host-side
+                zero = jnp.zeros((1,) + c.shape[1:], c.dtype)
+                return jax.lax.dynamic_update_slice_in_dim(c, zero, slot,
+                                                           axis=0)
+
+            out = _tree_map_axes(leaf, saxes, cache)
+            out["page_table"] = table
+            return out
+
+        def pgather_fn(cache, slot):
+            cache = dict(cache)
+            table = cache.pop("page_table")
+            row = table[slot]  # (pps,)
+            rowc = jnp.maximum(row, 0)
+
+            def leaf(ax, c):
+                if "seq" in ax:
+                    bi = ax.index("batch")
+                    pages = jnp.take(c, rowc, axis=bi)  # (..., pps, ps, ...)
+                    mask = (row >= 0).reshape(
+                        (1,) * bi + (row.shape[0],)
+                        + (1,) * (pages.ndim - bi - 1))
+                    pages = jnp.where(mask, pages, 0)
+                    cap = row.shape[0] * ps
+                    return pages.reshape(pages.shape[:bi] + (1, cap)
+                                         + pages.shape[bi + 2:])
+                if "batch" in ax:
+                    return jax.lax.dynamic_slice_in_dim(
+                        c, slot, 1, axis=ax.index("batch"))
+                return jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=0)[0]
+
+            out = _tree_map_axes(leaf, saxes, cache)
+            out.pop("active")  # gather returns model-format (prefill) caches
+            return out
+
+        self._pinsert = jax.jit(pinsert_fn, donate_argnums=(0,))
+        self._pinsert_many = jax.jit(pinsert_many_fn, donate_argnums=(0,))
+        self._pevict = jax.jit(pevict_fn, donate_argnums=(0,))
+        self._pgather = jax.jit(pgather_fn)
+
+    # -- protocol ------------------------------------------------------------
+    def init_slots(self, n_slots: int, cache_len: int) -> Any:
+        self.n_slots, self.cache_len = n_slots, cache_len
+        pps = pages_for(cache_len, self.page_size)
+        self.alloc = PageAllocator(self.n_pages, self.page_size, n_slots,
+                                   pps)
+        self._host_pos = np.zeros(n_slots, np.int64)
+        self._host_active = np.zeros(n_slots, bool)
+        specs = paged_cache_specs(self.model, n_slots, cache_len,
+                                  self.page_size, self.n_pages)
+        cache = jax.tree_util.tree_map(
+            lambda sds: jnp.zeros(sds.shape, sds.dtype), specs)
+        cache["page_table"] = jnp.asarray(self.alloc.table)
+        return cache
+
+    def try_reserve(self, slot: int, request) -> bool:
+        """Admission page budget: reserve the request's worst case
+        (``ceil((prompt_len + max_tokens) / page_size)`` pages) so
+        grow-on-decode can never fail; False = the request waits."""
+        need = pages_for(request.prompt_len + request.max_tokens,
+                         self.page_size)
+        return self.alloc.reserve(slot, need)
+
+    def insert(self, cache, slot, prefill_cache):
+        slot = int(slot)
+        n_tok = int(np.asarray(prefill_cache["pos"]))
+        self.alloc.allocate(slot, n_tok)
+        self._host_pos[slot] = n_tok
+        self._host_active[slot] = True
+        cache = dict(cache, page_table=jnp.asarray(self.alloc.table))
+        one = dict(prefill_cache)
+        one.setdefault("active", jnp.ones((), jnp.bool_))
+        return self._pinsert(cache, jnp.asarray(slot, jnp.int32), one)
+
+    def insert_many(self, cache, slots, prefill_cache):
+        slots_np = np.asarray(slots, np.int64)
+        pos_vals = np.broadcast_to(np.asarray(prefill_cache["pos"]),
+                                   slots_np.shape)
+        for s, n_tok in zip(slots_np, pos_vals):
+            self.alloc.allocate(int(s), int(n_tok))
+            self._host_pos[int(s)] = int(n_tok)
+            self._host_active[int(s)] = True
+        cache = dict(cache, page_table=jnp.asarray(self.alloc.table))
+        rows = dict(prefill_cache)
+        rows.setdefault("active", jnp.ones((), jnp.bool_))
+        return self._pinsert_many(cache, jnp.asarray(slots, jnp.int32), rows)
+
+    def evict(self, cache, slot):
+        slot = int(slot)
+        self.alloc.free_slot(slot)
+        self._host_pos[slot] = 0
+        self._host_active[slot] = False
+        cache = dict(cache, page_table=jnp.asarray(self.alloc.table))
+        return self._pevict(cache, jnp.asarray(slot, jnp.int32))
+
+    def gather(self, cache, slot):
+        return self._pgather(cache, jnp.asarray(int(slot), jnp.int32))
+
+    def decode(self, params, cache, tokens):
+        """Fused decode with grow-on-decode.
+
+        Before the jitted step, every active slot whose next write index
+        crosses into an unowned page gets one page from the free list
+        (guaranteed by its admission reservation); the device page table is
+        refreshed only when the host table changed.  Dense batch=1 replay
+        caches (no ``page_table`` leaf) pass straight through — the paged
+        and dense decode executables coexist keyed on cache structure.
+        """
+        if not (isinstance(cache, dict) and "page_table" in cache):
+            return self._decode(params, cache, tokens)
+        dirty = False
+        for slot in np.nonzero(self._host_active)[0]:
+            p = int(self._host_pos[slot])
+            if p < self.cache_len \
+                    and int(self.alloc.owned[slot]) * self.page_size <= p:
+                self.alloc.allocate(int(slot), p + 1)
+                dirty = True
+        if dirty:
+            cache = dict(cache, page_table=jnp.asarray(self.alloc.table))
+        logits, cache = self._decode(params, cache, tokens)
+        cap = self.alloc.pages_per_slot * self.page_size
+        act = self._host_active
+        self._host_pos[act] = np.minimum(self._host_pos[act] + 1, cap)
+        return logits, cache
+
+    # -- placement -----------------------------------------------------------
+    def shardings(self, rules, n_slots: int, cache_len: int):
+        """Paged pools keep head/state axes on the activation rules; the
+        page and in-page axes are replicated (a page is not slot-owned, so
+        the slot-axis "batch" rule does not apply to pools)."""
+        from repro.distributed.sharding import tree_act_shardings
+        specs = paged_cache_specs(self.model, n_slots, cache_len,
+                                  self.page_size, self.n_pages)
+        axes = model_zoo.decode_cache_axes(self.model)
+
+        def one(ax, _sds):
+            if "seq" not in ax:
+                return ax
+            return tuple(None if a in ("batch", "seq") else a for a in ax)
+
+        paxes = _tree_map_axes(one, axes, specs)
+        out = tree_act_shardings(rules, paxes, specs)
+        pps = pages_for(cache_len, self.page_size)
+        table = jax.ShapeDtypeStruct((n_slots, pps), jnp.int32)
+        out["page_table"] = tree_act_shardings(
+            rules, (None, None), table)
+        return out
+
+
+def cache_nbytes(cache) -> int:
+    """Resident bytes of a decode cache (the dense-vs-paged memory math:
+    ``n_pages * page_size`` vs ``n_slots * cache_len`` tokens of KV)."""
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(cache))

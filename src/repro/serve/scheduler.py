@@ -59,6 +59,18 @@ class SchedulerConfig:
                   behavior).  ``submit``/``submit_all`` raise
                   :class:`QueueFull` at capacity; the engine's
                   ``try_submit`` turns that into an explicit shed.
+    paged:        allocate KV as a shared page pool behind a per-slot page
+                  table (serve/paging.py) instead of dense
+                  ``(n_slots, cache_len)`` rows.  Memory goes from
+                  ``n_slots * cache_len`` to ``n_pages * page_size`` cache
+                  tokens — sized to what requests actually use; admission
+                  gains a page budget (a request needs
+                  ``ceil((prompt_len + max_tokens) / page_size)`` pages
+                  reserved or it waits in the pending queue).
+    page_size:    tokens per page when paged.
+    n_pages:      pool size when paged; 0 = dense-equivalent
+                  (``n_slots * ceil(cache_len / page_size)`` — no memory
+                  saving, same behavior; set lower to oversubscribe).
     """
 
     n_slots: int = 8
@@ -68,6 +80,22 @@ class SchedulerConfig:
     max_buckets: int = 8
     prefill_batch: int = 1
     max_pending: int = 0
+    paged: bool = False
+    page_size: int = 64
+    n_pages: int = 0
+
+    @property
+    def pages_per_slot(self) -> int:
+        return -(-self.cache_len // self.page_size)
+
+    @property
+    def resolved_n_pages(self) -> int:
+        if not self.paged:
+            return 0
+        return self.n_pages or self.dense_equivalent_pages()
+
+    def dense_equivalent_pages(self) -> int:
+        return self.n_slots * self.pages_per_slot
 
     def ladder(self) -> Tuple[int, ...]:
         slw = SLWConfig(enabled=True, start_seq_len=self.min_prompt_bucket,
@@ -115,6 +143,18 @@ class Scheduler:
         if cfg.n_slots < 1 or cfg.cache_len < 1:
             raise ValueError(f"need n_slots >= 1 and cache_len >= 1, got "
                              f"{cfg.n_slots}, {cfg.cache_len}")
+        if cfg.paged:
+            if cfg.page_size < 1:
+                raise ValueError(f"need page_size >= 1, got {cfg.page_size}")
+            if cfg.resolved_n_pages < cfg.pages_per_slot:
+                # any request _validate admits (prompt + max_tokens up to
+                # cache_len) must eventually get its reservation once the
+                # pool drains, else admission deadlocks with work pending
+                raise ValueError(
+                    f"n_pages {cfg.resolved_n_pages} cannot hold one "
+                    f"maximal request ({cfg.pages_per_slot} pages = "
+                    f"cache_len {cfg.cache_len} / page_size "
+                    f"{cfg.page_size})")
         self.cfg = cfg
         self.ladder = cfg.ladder()
         self.pending: Deque[Request] = deque()
@@ -185,7 +225,8 @@ class Scheduler:
         """Append one already-validated request (engine backlog feed)."""
         self.pending.append(request)
 
-    def next_admission(self, k: int = 1) -> List[Tuple[int, Request]]:
+    def next_admission(self, k: int = 1, reserve=None
+                       ) -> List[Tuple[int, Request]]:
         """Pop up to ``k`` same-split (free slot, request) pairs; [] if no
         slot or no request is available.
 
@@ -194,8 +235,20 @@ class Scheduler:
         al.-style batch composition: same-shape prompts amortize one
         ``(k, bucket)`` prefill), skipped requests keep their relative
         order.
+
+        ``reserve`` is the paged-admission budget hook
+        (``PagedDecodeState.try_reserve``): called as ``reserve(slot,
+        request)`` before a pair is emitted.  A False for the queue *head*
+        returns [] with the queue untouched — strict FCFS, the head waits
+        for pages freed by retiring slots rather than being starved by
+        smaller requests jumping it.  A False for a pulled-forward
+        candidate just skips that candidate (it kept its queue position
+        anyway).
         """
         if not self.pending or not self.free:
+            return []
+        if reserve is not None and not reserve(self.free[-1],
+                                               self.pending[0]):
             return []
         head = self.pending.popleft()
         out = [(self.free.pop(), head)]
@@ -204,10 +257,13 @@ class Scheduler:
             skipped: List[Request] = []
             while self.pending and self.free and len(out) < k:
                 r = self.pending.popleft()
-                if prefill_split(r.prompt_len, self.ladder) == split:
-                    out.append((self.free.pop(), r))
-                else:
+                if prefill_split(r.prompt_len, self.ladder) != split:
                     skipped.append(r)
+                    continue
+                if reserve is not None and not reserve(self.free[-1], r):
+                    skipped.append(r)
+                    continue
+                out.append((self.free.pop(), r))
             self.pending.extendleft(reversed(skipped))
         return out
 
@@ -244,14 +300,22 @@ class Scheduler:
 
     def abort(self, slot: int, request: Request, detail: str = ""
               ) -> GenerationResult:
-        """Retire a slot whose request failed *before* activation (e.g. its
-        admission sampling raised): free the slot, record an ``error``
-        result so the caller still gets an answer for the uid."""
-        res = GenerationResult(uid=request.uid,
-                               prompt_len=request.prompt_len,
-                               finish_reason="error")
-        if slot in self.active:  # activated before the failure surfaced
-            self.active.pop(slot)
+        """Retire a slot whose request failed: free the slot, record an
+        ``error`` result so the caller still gets an answer for the uid.
+
+        If the request had already activated, its partial result — tokens
+        generated so far, possibly already streamed via ``on_token`` — is
+        preserved on the error result (a fresh empty result here used to
+        silently drop that work, so the caller saw tokens stream and then
+        vanish from the final answer)."""
+        st = self.active.pop(slot, None)
+        if st is not None:  # activated before the failure surfaced
+            res = st.result
+            res.finish_reason = "error"
+        else:
+            res = GenerationResult(uid=request.uid,
+                                   prompt_len=request.prompt_len,
+                                   finish_reason="error")
         self.free.append(slot)
         self.finished.append(res)
         return res

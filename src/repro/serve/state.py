@@ -58,6 +58,10 @@ class SlotDecodeState:
     def __init__(self, model):
         self.model = model
         self._axes = model.cache_axes()  # original axes ("pos" leaves = ())
+        # slot-cache trees carry one extra promoted leaf the model-format
+        # prefill caches lack: the per-slot "active" occupancy bit (models
+        # freeze pos and drop cache writes where it is False)
+        self._saxes = dict(self._axes, active=())
         self.slot_axes = model_zoo.decode_cache_axes(model)
 
         def insert_fn(cache, slot, one):
@@ -68,7 +72,7 @@ class SlotDecodeState:
                 # promoted bookkeeping leaf: scalar -> per-slot vector
                 return jax.lax.dynamic_update_slice_in_dim(
                     c, jnp.asarray(p)[None].astype(c.dtype), slot, axis=0)
-            return _tree_map_axes(leaf, self._axes, cache, one)
+            return _tree_map_axes(leaf, self._saxes, cache, one)
 
         def insert_many_fn(cache, slots, rows):
             k = slots.shape[0]
@@ -84,7 +88,7 @@ class SlotDecodeState:
                 if p.ndim < c.ndim:
                     p = jnp.broadcast_to(p, (k,) + c.shape[1:])
                 return c.at[slots].set(p)
-            return _tree_map_axes(leaf, self._axes, cache, rows)
+            return _tree_map_axes(leaf, self._saxes, cache, rows)
 
         def evict_fn(cache, slot):
             def leaf(ax, c):
@@ -93,7 +97,7 @@ class SlotDecodeState:
                 zero = jnp.zeros((1,) + c.shape[1:], c.dtype)
                 return jax.lax.dynamic_update_slice_in_dim(c, zero, slot,
                                                            axis=0)
-            return _tree_map_axes(leaf, self._axes, cache)
+            return _tree_map_axes(leaf, self._saxes, cache)
 
         def row_fn(kcache, i):
             def leaf(ax, c):
@@ -109,7 +113,9 @@ class SlotDecodeState:
                     return jax.lax.dynamic_slice_in_dim(
                         c, slot, 1, axis=ax.index("batch"))
                 return jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=0)[0]
-            return _tree_map_axes(leaf, self._axes, cache)
+            out = _tree_map_axes(leaf, self._saxes, cache)
+            out.pop("active")  # gather returns model-format (prefill) caches
+            return out
 
         self._insert = jax.jit(insert_fn, donate_argnums=(0,))
         self._insert_many = jax.jit(insert_many_fn, donate_argnums=(0,))
@@ -123,8 +129,9 @@ class SlotDecodeState:
         return model_zoo.init_decode_cache(self.model, n_slots, cache_len)
 
     def insert(self, cache, slot, prefill_cache):
-        return self._insert(cache, jnp.asarray(slot, jnp.int32),
-                            prefill_cache)
+        one = dict(prefill_cache)
+        one.setdefault("active", jnp.ones((), jnp.bool_))
+        return self._insert(cache, jnp.asarray(slot, jnp.int32), one)
 
     def insert_many(self, cache, slots, prefill_cache):
         """Scatter a batch=k prefill cache into ``slots`` ((k,) int32, all
@@ -132,8 +139,9 @@ class SlotDecodeState:
         n_slots).  Bookkeeping leaves may be scalar (shared across the
         batch — the fresh same-bucket prefill) or (k,) per-row (after
         ragged decode-replay, see ``stack_rows``)."""
-        return self._insert_many(cache, jnp.asarray(slots, jnp.int32),
-                                 prefill_cache)
+        rows = dict(prefill_cache)
+        rows.setdefault("active", jnp.ones((), jnp.bool_))
+        return self._insert_many(cache, jnp.asarray(slots, jnp.int32), rows)
 
     def evict(self, cache, slot):
         return self._evict(cache, jnp.asarray(slot, jnp.int32))

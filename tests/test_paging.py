@@ -1,0 +1,403 @@
+"""Paged KV caches (serve/paging.py) + the slot-lifecycle bug burn-down.
+
+* paged-vs-dense engine parity: greedy continuous batching over a paged
+  pool is tokenwise identical to the dense slot cache while the pool is
+  strictly smaller than the dense allocation (the ISSUE acceptance
+  criterion; gpt2 fast + zamba2 hybrid slow-marked, rwkv6 pins that
+  recurrent O(1) leaves page as a no-op);
+* allocator: property test over random reserve/allocate/free sequences —
+  no page is ever leaked or double-owned; gather -> evict -> insert
+  round-trips bit-exactly through the page pool;
+* admission: page exhaustion makes requests wait, then admits after frees;
+* paged flash-decode kernel vs the gather-then-dense oracle;
+* regressions: free-slot ``pos`` no longer advances during fused decode,
+  per-slot writes clamp at ``cache_len``, ``Scheduler.abort`` preserves
+  partial results, ``EngineStats.step_times`` is a bounded ring.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.kernels import flash_decode_paged, flash_decode_paged_partials
+from repro.kernels.flash_decode.ref import (
+    decode_attention_reference, gather_pages,
+    paged_decode_attention_reference, paged_decode_partials_reference)
+from repro.models import build_model, init_params
+from repro.serve import (InferenceEngine, PageAllocator, PagedDecodeState,
+                         PageExhausted, Request, SamplingParams, Scheduler,
+                         SchedulerConfig, SlotDecodeState, cache_nbytes)
+from repro.serve.engine import STEP_TIME_WINDOW, EngineStats
+from repro.serve.paging import pages_for
+from repro.serve.types import GenerationResult
+
+
+def _build(arch):
+    cfg = reduced(get_arch(arch).model)
+    model = build_model(cfg, dtype=jnp.float32, remat="none")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, model, params
+
+
+def _mixed_requests(cfg, n=8, seed=3):
+    rng = np.random.default_rng(seed)
+    shapes = [(7, 5), (20, 9), (33, 3), (12, 7), (40, 4), (9, 8), (25, 6),
+              (16, 2)][:n]
+    return [Request(uid=i,
+                    tokens=tuple(int(t) for t in
+                                 rng.integers(0, cfg.vocab_size, size=plen)),
+                    max_tokens=mt)
+            for i, (plen, mt) in enumerate(shapes)]
+
+
+DENSE = SchedulerConfig(n_slots=3, cache_len=64, min_prompt_bucket=8,
+                        round_multiple=16, max_buckets=4)
+# 7 * 16 = 112 pool tokens < 3 * 64 = 192 dense tokens, and small enough
+# that admissions must wait on pages mid-run (acceptance criterion: parity
+# while n_pages * page_size < n_slots * cache_len)
+PAGED = dataclasses.replace(DENSE, paged=True, page_size=16, n_pages=7)
+
+PARITY_ARCHS = ["gpt2-117m", "rwkv6-7b",
+                pytest.param("zamba2-2.7b", marks=pytest.mark.slow)]
+
+
+# -- engine parity -----------------------------------------------------------
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_paged_engine_matches_dense(arch):
+    cfg, model, params = _build(arch)
+    assert PAGED.resolved_n_pages * PAGED.page_size \
+        < DENSE.n_slots * DENSE.cache_len
+    reqs = _mixed_requests(cfg)
+    dense = InferenceEngine(model, params, cfg=DENSE)
+    d_res = dense.run(reqs)
+    paged = InferenceEngine(model, params, cfg=PAGED)
+    p_res = paged.run(reqs)
+    for d, p in zip(d_res, p_res):
+        assert p.uid == d.uid
+        assert p.tokens == d.tokens, f"uid {d.uid}"
+        assert p.finish_reason == d.finish_reason
+    # every page returned to the free list once the workload drained
+    paged.state.alloc.check()
+    assert paged.state.alloc.pages_in_use == 0
+    assert sorted(paged.scheduler.free) == list(range(PAGED.n_slots))
+    # the paged KV pool is resident-smaller than the dense slot rows
+    seq_leaves = {"k", "v", "attn_k", "attn_v"}
+    dkv = {k: v for k, v in dense.cache.items() if k in seq_leaves}
+    pkv = {k: v for k, v in paged.cache.items() if k in seq_leaves}
+    if dkv:  # rwkv6 has no attention KV: paging is a structural no-op
+        assert cache_nbytes(pkv) < cache_nbytes(dkv)
+
+
+def test_paged_engine_stop_token_and_reuse():
+    """Stop tokens retire paged slots early (pages freed before the length
+    budget), and the engine is reusable after a paged run."""
+    cfg, model, params = _build("gpt2-117m")
+    dense = InferenceEngine(model, params, cfg=DENSE)
+    paged = InferenceEngine(model, params, cfg=PAGED)
+    rng = np.random.default_rng(0)
+    base = tuple(int(t) for t in rng.integers(0, cfg.vocab_size, size=9))
+    oracle = dense.run([Request(uid=0, tokens=base, max_tokens=6)])[0].tokens
+    stop = oracle[1]
+    reqs = [Request(uid=0, tokens=base, max_tokens=6,
+                    sampling=SamplingParams(stop_token=stop)),
+            Request(uid=1, tokens=base[:5], max_tokens=1),
+            Request(uid=2, tokens=base, max_tokens=6)]
+    res = paged.run(reqs)
+    assert res[0].tokens == oracle[:2]
+    assert res[0].finish_reason == "stop_token"
+    assert res[1].n_generated == 1
+    assert res[2].tokens == oracle
+    paged.state.alloc.check()
+    assert paged.state.alloc.pages_in_use == 0
+    # reuse: a second run on the same engine stays exact
+    res2 = paged.run([Request(uid=7, tokens=base, max_tokens=6)])
+    assert res2[0].tokens == oracle
+
+
+# -- allocator ---------------------------------------------------------------
+def test_allocator_random_ops_never_leak():
+    """Random reserve/allocate/grow/free sequences keep the ownership
+    invariants: every page on the free list xor owned by exactly one slot,
+    committed <= n_pages, table rows dense-prefix + -1 tail."""
+    rng = np.random.default_rng(0)
+    alloc = PageAllocator(n_pages=13, page_size=4, n_slots=5,
+                          pages_per_slot=4)
+    live = {}  # slot -> reserved pages
+    for _ in range(500):
+        op = rng.integers(0, 4)
+        slot = int(rng.integers(0, 5))
+        if op == 0 and slot not in live:
+            need = int(rng.integers(1, 5))
+            if alloc.reserve(slot, need):
+                live[slot] = need
+        elif op == 1 and slot in live:
+            # allocate up to the reservation: must never raise
+            n_tok = int(rng.integers(1, live[slot] * 4 + 1))
+            alloc.allocate(slot, n_tok)
+        elif op == 2 and slot in live:
+            alloc.free_slot(slot)
+            del live[slot]
+        elif op == 3 and slot in live:
+            # idempotent: re-allocating a covered range is a no-op
+            before = int(alloc.owned[slot])
+            alloc.allocate(slot, before * 4)
+            assert int(alloc.owned[slot]) == before
+        alloc.check()
+    for slot in list(live):
+        alloc.free_slot(slot)
+    alloc.check()
+    assert alloc.pages_in_use == 0
+
+
+def test_allocator_exhaustion_is_explicit():
+    alloc = PageAllocator(n_pages=3, page_size=4, n_slots=2,
+                          pages_per_slot=4)
+    assert alloc.reserve(0, 3)
+    alloc.allocate(0, 12)
+    # no reservation and the pool is committed -> explicit fault, not a
+    # silent overwrite of someone else's page
+    with pytest.raises(PageExhausted):
+        alloc.allocate(1, 1)
+    assert not alloc.reserve(1, 5)  # > pages_per_slot can never be honored
+    # growing past the page table is a fault even with pool headroom
+    roomy = PageAllocator(n_pages=5, page_size=4, n_slots=2,
+                          pages_per_slot=2)
+    assert roomy.reserve(0, 2)
+    with pytest.raises(PageExhausted):
+        roomy.allocate(0, 9)  # needs 3 pages, table holds 2
+
+
+def test_pages_for():
+    assert pages_for(0, 16) == 0
+    assert pages_for(1, 16) == 1
+    assert pages_for(16, 16) == 1
+    assert pages_for(17, 16) == 2
+
+
+# -- state round-trip --------------------------------------------------------
+def test_paged_gather_evict_insert_roundtrip():
+    """gather -> evict -> insert through the page pool is bit-exact, and
+    the re-inserted slot may land on different physical pages."""
+    cfg, model, params = _build("gpt2-117m")
+    state = PagedDecodeState(model, page_size=8, n_pages=10)
+    cache = state.init_slots(3, 32)
+    rng = np.random.default_rng(5)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(1, 13)),
+                       jnp.int32)
+    _, row = model.prefill(params, {"tokens": toks}, cache_len=32)
+    assert state.alloc.reserve(1, pages_for(32, 8))
+    cache = state.insert(cache, 1, row)
+    got = state.gather(cache, 1)
+    assert set(got.keys()) == set(row.keys())  # model-format: no active leaf
+    np.testing.assert_array_equal(np.asarray(got["k"]), np.asarray(row["k"]))
+    np.testing.assert_array_equal(np.asarray(got["v"]), np.asarray(row["v"]))
+    assert int(got["pos"]) == 13
+    cache = state.evict(cache, 1)
+    state.alloc.check()
+    assert state.alloc.pages_in_use == 0
+    assert bool((np.asarray(cache["page_table"]) == -1).all())
+    # churn the free list so slot 1 lands on different pages, then re-insert
+    assert state.alloc.reserve(0, 2)
+    state.alloc.allocate(0, 16)
+    assert state.alloc.reserve(1, pages_for(32, 8))
+    cache = dict(cache, page_table=jnp.asarray(state.alloc.table))
+    cache = state.insert(cache, 1, got)
+    again = state.gather(cache, 1)
+    np.testing.assert_array_equal(np.asarray(again["k"]),
+                                  np.asarray(row["k"]))
+    assert int(again["pos"]) == 13
+
+
+# -- admission under page pressure ------------------------------------------
+def test_page_exhaustion_blocks_then_admits():
+    """Strict FCFS under page pressure: a blocked queue head returns [] with
+    the queue untouched, and admission resumes once an evict frees pages."""
+    cfg, model, params = _build("gpt2-117m")
+    sched_cfg = SchedulerConfig(n_slots=2, cache_len=32, page_size=16,
+                                n_pages=3, paged=True, min_prompt_bucket=8,
+                                round_multiple=8, max_buckets=2)
+    state = PagedDecodeState(model, page_size=16, n_pages=3)
+    cache = state.init_slots(2, 32)
+    sched = Scheduler(sched_cfg)
+    # each request needs 2 pages; the 3-page pool holds only one at a time
+    r0 = Request(uid=0, tokens=(1,) * 10, max_tokens=10)
+    r1 = Request(uid=1, tokens=(2,) * 10, max_tokens=10)
+    sched.submit(r0)
+    sched.submit(r1)
+    adm = sched.next_admission(reserve=state.try_reserve)
+    assert [r.uid for _, r in adm] == [0]
+    slot0 = adm[0][0]
+    # head blocked: nothing admitted, r1 still queued in order
+    assert sched.next_admission(reserve=state.try_reserve) == []
+    assert [r.uid for r in sched.pending] == [1]
+    # a free slot exists, but no pages -- it must wait, not admit
+    assert sched.free
+    state.alloc.free_slot(slot0)  # r0 retires
+    sched.free.append(slot0)
+    adm = sched.next_admission(reserve=state.try_reserve)
+    assert [r.uid for _, r in adm] == [1]
+    state.alloc.check()
+
+
+def test_paged_engine_oversubscribed_completes():
+    """End-to-end: pool smaller than the slot capacity forces waiting, yet
+    every request completes with exact dense parity (nothing starves)."""
+    cfg, model, params = _build("gpt2-117m")
+    base = SchedulerConfig(n_slots=2, cache_len=32, min_prompt_bucket=8,
+                           round_multiple=8, max_buckets=2)
+    tight = dataclasses.replace(base, paged=True, page_size=16, n_pages=3)
+    reqs = [Request(uid=i, tokens=tuple(range(3 + i, 13 + i)), max_tokens=9)
+            for i in range(4)]
+    d_res = InferenceEngine(model, params, cfg=base).run(reqs)
+    eng = InferenceEngine(model, params, cfg=tight)
+    # the 3-page pool can hold only one 2-page request at a time
+    seen = []
+    orig = eng.state.decode
+
+    def spy(params_, cache_, toks_):
+        seen.append(int(eng.state._host_active.sum()))
+        return orig(params_, cache_, toks_)
+
+    eng.state.decode = spy
+    p_res = eng.run(reqs)
+    eng.state.decode = orig
+    assert max(seen) == 1  # pages, not slots, were the binding constraint
+    for d, p in zip(d_res, p_res):
+        assert p.tokens == d.tokens and p.finish_reason == "length"
+    eng.state.alloc.check()
+    assert eng.state.alloc.pages_in_use == 0
+
+
+def test_scheduler_rejects_undersized_pool():
+    with pytest.raises(ValueError):
+        Scheduler(SchedulerConfig(n_slots=2, cache_len=64, paged=True,
+                                  page_size=16, n_pages=3))
+
+
+# -- paged flash-decode kernel ----------------------------------------------
+def _paged_fixture(seed=0, b=5, h=8, kvh=4, d=16, ps=8, n_pages=12, mp=4):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    k_pool = jnp.asarray(rng.normal(size=(n_pages, ps, kvh, d)), jnp.float32)
+    v_pool = jnp.asarray(rng.normal(size=(n_pages, ps, kvh, d)), jnp.float32)
+    # ragged ownership incl. a full slot and an empty slot
+    table = np.full((b, mp), -1, np.int32)
+    lengths = np.asarray([5, 8, 19, 32, 0], np.int32)
+    free = list(range(n_pages))[::-1]
+    for i, ln in enumerate(lengths):
+        for j in range(pages_for(int(ln), ps)):
+            table[i, j] = free.pop()
+    return q, k_pool, v_pool, jnp.asarray(table), jnp.asarray(lengths)
+
+
+def test_paged_kernel_matches_reference():
+    q, k_pool, v_pool, table, lengths = _paged_fixture()
+    out = flash_decode_paged(q, k_pool, v_pool, table, lengths,
+                             interpret=True)
+    ref = paged_decode_attention_reference(q, k_pool, v_pool, table, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    o, m, l = flash_decode_paged_partials(q, k_pool, v_pool, table, lengths,
+                                          interpret=True)
+    ro, rm, rl = paged_decode_partials_reference(q, k_pool, v_pool, table,
+                                                 lengths)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(ro),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(rm),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(l), np.asarray(rl),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_reference_matches_dense_on_gathered_cache():
+    """The paged oracle is the dense oracle over the gathered cache — pins
+    gather_pages (zeroed unowned pages, position-ordered reassembly)."""
+    q, k_pool, v_pool, table, lengths = _paged_fixture(seed=1)
+    kc, vc = gather_pages(k_pool, table), gather_pages(v_pool, table)
+    dense = decode_attention_reference(q, kc, vc, lengths)
+    paged = paged_decode_attention_reference(q, k_pool, v_pool, table,
+                                             lengths)
+    np.testing.assert_allclose(np.asarray(paged), np.asarray(dense),
+                               rtol=1e-6, atol=1e-6)
+
+
+# -- regression: slot-lifecycle bugs ----------------------------------------
+def test_free_slot_pos_frozen_during_fused_decode():
+    """Bugfix: fused decode used to advance ``pos`` for every slot — free
+    and evicted slots included — so long-lived engines pushed empty slots'
+    write indices past cache_len and re-inserts wrote out of bounds."""
+    cfg, model, params = _build("gpt2-117m")
+    state = SlotDecodeState(model)
+    cache = state.init_slots(3, 16)
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(1, 5)),
+                       jnp.int32)
+    _, row = model.prefill(params, {"tokens": toks}, cache_len=16)
+    cache = state.insert(cache, 1, row)
+    for _ in range(3):
+        _, cache = state.decode(params, cache,
+                                jnp.zeros((3, 1), jnp.int32))
+    pos = np.asarray(cache["pos"])
+    assert pos[1] == 8  # the occupied slot advanced 5 -> 8
+    assert pos[0] == 0 and pos[2] == 0  # free slots frozen
+    # evicted slots freeze too (active cleared on evict)
+    cache = state.evict(cache, 1)
+    _, cache = state.decode(params, cache, jnp.zeros((3, 1), jnp.int32))
+    assert (np.asarray(cache["pos"]) == 0).all()
+
+
+def test_decode_write_clamped_at_cache_len():
+    """Bugfix: per-slot decode writes past ``cache_len`` now drop instead
+    of wrapping/clobbering; ``pos`` saturates at the capacity."""
+    cfg, model, params = _build("gpt2-117m")
+    state = SlotDecodeState(model)
+    cache = state.init_slots(1, 8)
+    rng = np.random.default_rng(4)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(1, 6)),
+                       jnp.int32)
+    _, row = model.prefill(params, {"tokens": toks}, cache_len=8)
+    cache = state.insert(cache, 0, row)
+    step = jnp.zeros((1, 1), jnp.int32)
+    _, cache = state.decode(params, cache, step)  # pos 6 -> 7
+    _, cache = state.decode(params, cache, step)  # pos 7 -> 8 (full)
+    k_full = np.asarray(cache["k"]).copy()
+    _, cache = state.decode(params, cache, step)  # past capacity
+    assert int(np.asarray(cache["pos"])[0]) == 8  # saturated, not 9
+    np.testing.assert_array_equal(np.asarray(cache["k"]), k_full)
+
+
+def test_abort_preserves_partial_result():
+    """Bugfix: aborting an activated slot used to fabricate a fresh empty
+    result, silently dropping tokens already streamed via on_token."""
+    sched = Scheduler(SchedulerConfig(n_slots=2, cache_len=32))
+    req = Request(uid=9, tokens=(1, 2, 3), max_tokens=8)
+    sched.submit(req)
+    [(slot, r)] = sched.next_admission()
+    st = sched.activate(slot, r, first_token=11, prefill_s=0.0)
+    st.result.tokens.extend([12, 13])
+    res = sched.abort(slot, r)
+    assert res.tokens == [11, 12, 13]
+    assert res.finish_reason == "error"
+    assert slot in sched.free and not sched.active
+    # never-activated abort still yields an (empty) error result
+    res2 = sched.abort(sched.free[-1], req)
+    assert res2.tokens == [] and res2.finish_reason == "error"
+
+
+def test_step_times_bounded_ring_and_percentile():
+    """Bugfix: ``step_times`` grew one float per fused step forever; it is
+    now a bounded ring with exact percentiles for short runs."""
+    stats = EngineStats()
+    assert stats.latency_percentile(50) == 0.0
+    for v in (1.0, 2.0, 3.0, 4.0):
+        stats.step_times.append(v)
+    assert stats.latency_percentile(50) == 2.5
+    assert stats.latency_percentile(100) == 4.0
+    for i in range(STEP_TIME_WINDOW * 2):
+        stats.step_times.append(float(i))
+    assert len(stats.step_times) == STEP_TIME_WINDOW
+    # trailing-window percentile: min of the ring is the oldest survivor
+    assert stats.latency_percentile(0) == float(STEP_TIME_WINDOW)
