@@ -25,6 +25,7 @@ SUITES = [
     ("fig3", "benchmarks.bench_fig3_pacing"),
     ("table4", "benchmarks.bench_table4_gpt3recipe"),
     ("a2", "benchmarks.bench_a2_lr_decay"),
+    ("optim", "benchmarks.bench_optim"),
     ("kernels", "benchmarks.bench_kernels"),
     ("serve", "benchmarks.bench_serve"),
     ("roofline", "benchmarks.bench_roofline"),

@@ -135,6 +135,16 @@ def quarantine(directory: str, step: int) -> str:
     return dst
 
 
+def _legacy_opt_alias(key: str) -> Optional[str]:
+    """Map a chain-format optimizer leaf key to its legacy monolithic
+    location: pre-chain checkpoints stored the AdamW state flat under
+    ``opt/`` (``opt/m/...``, ``opt/v/...``, ``opt/count``); the composable
+    chain nests it under the ``adam`` transform slot.  Restoring an old
+    checkpoint into a new trainer is therefore a key rename, not a copy."""
+    m = re.fullmatch(r"opt/(?:shampoo/)?adam/((?:m|v)(?:/.*)?|count)", key)
+    return f"opt/{m.group(1)}" if m else None
+
+
 def restore(directory: str, step: int, like: Any,
             shardings: Optional[Any] = None) -> Tuple[Any, Dict]:
     """Restore into the structure of `like` (a pytree of arrays or
@@ -144,6 +154,8 @@ def restore(directory: str, step: int, like: Any,
     Every payload is validated against the manifest (shape, dtype, crc32
     content checksum when present — pre-hardening manifests lack it and
     still restore); any mismatch raises :class:`CheckpointCorruption`.
+    Legacy ``{"m","v","count"}`` optimizer payloads are transparently
+    migrated into the chain format via :func:`_legacy_opt_alias`.
     """
     path = os.path.join(directory, f"step_{step:012d}")
     try:
@@ -151,13 +163,22 @@ def restore(directory: str, step: int, like: Any,
             manifest = json.load(f)
     except (OSError, json.JSONDecodeError) as e:
         raise CheckpointCorruption(f"unreadable manifest in {path}: {e}")
-    keys = [k for k, _ in _flatten(like)]
-    missing = [k for k in keys if k not in manifest["leaves"]]
+    keys = {}
+    for k, _ in _flatten(like):
+        if k in manifest["leaves"]:
+            keys[k] = k
+            continue
+        alias = _legacy_opt_alias(k)
+        if alias is not None and alias in manifest["leaves"]:
+            keys[k] = alias
+        else:
+            keys[k] = k  # reported missing below
+    missing = [k for k, src in keys.items() if src not in manifest["leaves"]]
     if missing:
         raise ValueError(f"checkpoint missing leaves: {missing[:5]} ...")
     arrays = {}
-    for key in keys:
-        meta = manifest["leaves"][key]
+    for key, src in keys.items():
+        meta = manifest["leaves"][src]
         fpath = os.path.join(path, meta["file"])
         try:
             arr = np.load(fpath)
@@ -192,8 +213,18 @@ def migrate_host_state(host: Dict) -> Dict:
     (``{"curriculum": ..., "tracker": ...}``); the control plane now
     checkpoints one ``controller`` dict (see core.regulators.ControllerState).
     Legacy curriculum state maps onto the ``seqlen`` regulator's slot.
+    A host dict carrying a legacy monolithic ``{"m","v","count"}`` opt
+    state (in-memory snapshots, ring payloads) is upgraded into the chain
+    format (``{"adam": {...}, ...}``); the on-disk equivalent happens
+    leaf-wise in :func:`restore` via :func:`_legacy_opt_alias`.
     """
-    if "controller" in host:
+    if isinstance(host.get("opt"), dict):
+        from repro.optim.transforms import migrate_opt_state
+        new_opt = migrate_opt_state(host["opt"])
+        if new_opt is not host["opt"]:
+            host = dict(host)
+            host["opt"] = new_opt
+    if "controller" in host:  # already new-format: pass through untouched
         return host
     out = dict(host)
     regs = {}

@@ -209,6 +209,33 @@ class OptimizerConfig:
     eps: float = 1e-8
     weight_decay: float = 0.01
     grad_clip: float = 1.0
+    # --- composable optimizer chain (repro.optim.transforms) -------------
+    # core preconditioner: adamw (legacy-exact default) | sm3 | shampoo
+    # (block-diagonal Kronecker preconditioning grafted onto the Adam
+    # update magnitude)
+    optimizer: str = "adamw"
+    # weight-decay mask: "all" decays every leaf (legacy-exact default);
+    # "std" exempts biases/norm gains (1-D-per-layer leaves)
+    decay_mask: str = "all"
+    # adaptive gradient clipping (Brock et al.): per-leaf grad/param-norm
+    # ratio clip, composing after the global clip (grad_clip=0 replaces it;
+    # the global-norm telemetry is still measured).  0 disables.
+    agc_clip: float = 0.0
+    agc_eps: float = 1e-3
+    # per-leaf LR scaling: ((label_substring, factor), ...) — factors
+    # multiply the update of every param leaf whose label matches
+    lr_scales: Tuple[Tuple[str, float], ...] = ()
+    # telemetry: "scalar" (legacy globals only — one reduction pass) |
+    # "per_leaf" (adds fixed-size named vectors: var_max / grad-norm /
+    # update-norm / param-norm per labeled leaf, for per-layer regulators)
+    telemetry_level: str = "scalar"
+    # sm3 heavy-ball momentum on the preconditioned update (0 disables)
+    sm3_momentum: float = 0.9
+    # shampoo: max block side preconditioned (bigger leaves fall back to
+    # Adam), eigh refresh cadence, and the statistics/eigenvalue ridge
+    shampoo_block_size: int = 128
+    shampoo_interval: int = 10
+    shampoo_eps: float = 1e-6
     # token_wise cosine decay (paper Appendix A.2) or step_wise (baseline GPT-2)
     schedule: str = "token_cosine"  # token_cosine | step_cosine | constant
     warmup_steps: int = 0

@@ -40,6 +40,8 @@ from __future__ import annotations
 import copy
 import dataclasses
 import math
+import os
+import shutil
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Deque, Dict, List, Optional, Tuple
@@ -88,6 +90,8 @@ class RecoveryConfig:
     # snapshot ring
     snapshot_interval: int = 5   # steps between ring snapshots
     ring: int = 3                # snapshots kept in memory
+    ring_dir: str = ""           # spill the ring here on drain; "" derives
+                                 # <checkpoint_dir>/ring when one exists
     # escalation ladder
     lr_backoff: float = 0.5      # recovery LR scale multiplier per rung-1 hit
     lr_floor: float = 0.05       # never scale the LR below this
@@ -115,10 +119,49 @@ class DivergenceDetector:
         self.cooldown = 0
         self.var_trailing = 0.0
         self.var_streak = 0
+        # per-leaf blame (per-parameter telemetry, when the step emits it):
+        # trailing mean per labeled leaf + the group blamed for the last
+        # var excursion, so the seq-clamp/data-skip rungs know *which*
+        # component diverged, not just that one did.  var_max is the
+        # paper's precursor; raw-grad leaf norms catch explosions the
+        # global clip normalizes away before Adam's variance sees them.
+        self.leaf_trailing: Dict[str, np.ndarray] = {}
+        self.blamed = ""
+
+    GATE_KEYS = ("var_max", "grad_norm")
 
     def begin_cooldown(self) -> None:
         self.cooldown = self.cfg.cooldown_steps
         self.var_streak = 0
+
+    def _leaf_blame(self, tele: StepTelemetry, update_trailing: bool) -> str:
+        """Track per-leaf trailing var_max / raw-grad norms; return the
+        label of the worst excursion above the gate ('' when telemetry is
+        absent or every leaf is calm)."""
+        if tele.per_leaf is None:
+            return ""
+        worst, worst_ratio = "", 0.0
+        for key in self.GATE_KEYS:
+            v = tele.per_leaf.get(key)
+            if v is None:
+                continue
+            v = np.asarray(v, np.float64)
+            if not np.all(np.isfinite(v)):
+                continue
+            trail = self.leaf_trailing.get(key)
+            if trail is None or trail.shape != v.shape:
+                self.leaf_trailing[key] = v.copy()
+                continue
+            ratios = v / np.maximum(trail, 1e-30)
+            if np.any(ratios > self.cfg.var_gate) \
+                    and float(np.max(ratios)) > worst_ratio:
+                from repro.core.telemetry import blame
+                label = blame(tele.leaf_labels, ratios)
+                if label:
+                    worst, worst_ratio = label, float(np.max(ratios))
+            if update_trailing:
+                self.leaf_trailing[key] = 0.9 * trail + 0.1 * v
+        return worst
 
     def update(self, tele: StepTelemetry) -> Optional[DivergenceEvent]:
         self.n_obs += 1
@@ -136,27 +179,39 @@ class DivergenceDetector:
                 self.var_trailing = (tele.var_max if self.var_trailing == 0.0
                                      else 0.9 * self.var_trailing
                                      + 0.1 * tele.var_max)
+            self._leaf_blame(tele, update_trailing=True)
             return None
         if math.isfinite(tele.loss_ratio) \
                 and tele.loss_ratio > self.cfg.spike_ratio:
+            blamed = self._leaf_blame(tele, update_trailing=False)
+            if blamed:
+                self.blamed = blamed
             return DivergenceEvent(
                 "loss_spike", tele.step,
-                f"ratio={tele.loss_ratio:.2f}>{self.cfg.spike_ratio}")
+                f"ratio={tele.loss_ratio:.2f}>{self.cfg.spike_ratio}"
+                + (f" leaf={blamed}" if blamed else ""))
         if math.isfinite(tele.var_max) and self.var_trailing > 0.0 \
                 and tele.var_max > self.cfg.var_gate * self.var_trailing:
             self.var_streak += 1
+            # the leaf trailing mean is *not* chased during a streak, for
+            # the same reason the global one is not
+            blamed = self._leaf_blame(tele, update_trailing=False)
+            if blamed:
+                self.blamed = blamed
             if self.var_streak >= self.cfg.var_sustain:
                 return DivergenceEvent(
                     "var_excursion", tele.step,
                     f"var_max={tele.var_max:.3g}>"
                     f"{self.cfg.var_gate}x{self.var_trailing:.3g}"
-                    f" for {self.var_streak}")
+                    f" for {self.var_streak}"
+                    + (f" leaf={self.blamed}" if self.blamed else ""))
             return None
         self.var_streak = 0
         if math.isfinite(tele.var_max):
             self.var_trailing = (tele.var_max if self.var_trailing == 0.0
                                  else 0.9 * self.var_trailing
                                  + 0.1 * tele.var_max)
+        self._leaf_blame(tele, update_trailing=True)
         return None
 
 
@@ -171,6 +226,29 @@ class Snapshot:
     telemetry: StepTelemetry      # trainer's _last (plan inputs resume too)
 
 
+def _telemetry_to_host(tele: StepTelemetry) -> Dict[str, Any]:
+    """JSON-safe dict for a ring manifest (per-leaf vectors -> lists)."""
+    from repro.core.telemetry import per_leaf_to_host
+    d = dataclasses.asdict(tele)
+    d["leaf_labels"] = list(tele.leaf_labels)
+    d["per_leaf"] = (per_leaf_to_host(tele.per_leaf)
+                     if tele.per_leaf is not None else None)
+    return d
+
+
+def _telemetry_from_host(d: Dict[str, Any]) -> StepTelemetry:
+    from repro.core.telemetry import per_leaf_from_host
+    d = dict(d)
+    pl = d.pop("per_leaf", None)
+    labels = tuple(d.pop("leaf_labels", ()))
+    fields = {f.name for f in dataclasses.fields(StepTelemetry)}
+    kept = {k: v for k, v in d.items()
+            if k in fields and k not in ("per_leaf", "leaf_labels")}
+    return StepTelemetry(
+        per_leaf=per_leaf_from_host(pl) if pl is not None else None,
+        leaf_labels=labels, **kept)
+
+
 class StateRing:
     """Short in-memory ring of train-state snapshots.
 
@@ -178,6 +256,12 @@ class StateRing:
     train step recycles are never aliased; restoring hands back fresh
     ``jnp`` arrays, so the ring entry survives repeated rollbacks to the
     same point.
+
+    :meth:`save` / :meth:`load` spill/restore the ring through the
+    checkpoint module (one atomic, crc-validated ``step_*`` directory per
+    snapshot under a ``ring/`` sibling of the checkpoint dir), so a drained
+    preemption keeps its in-run restore points: ``--recover`` resumes with
+    the same rollback candidates it had when the SIGTERM landed.
     """
 
     def __init__(self, capacity: int = 3):
@@ -210,6 +294,51 @@ class StateRing:
     def materialize(self, snap: Snapshot) -> Any:
         """Fresh device arrays from a snapshot (safe to donate)."""
         return jax.tree_util.tree_map(jnp.asarray, snap.state)
+
+    # -- disk persistence (drain / --recover) --------------------------------
+    def save(self, directory: str) -> List[int]:
+        """Spill every ring snapshot to ``directory`` (atomic per-snapshot
+        checkpoint dirs; already-persisted steps are skipped, stale ones
+        pruned).  Returns the persisted step list."""
+        from repro.checkpoint import checkpoint as ckpt_lib
+        on_disk = set(ckpt_lib.available_steps(directory))
+        for snap in self._ring:
+            if snap.step in on_disk:
+                continue
+            ckpt_lib.save(directory, snap.step, snap.state, {
+                "ring": True,
+                "tokens_seen": snap.tokens_seen,
+                "controller": snap.controller,
+                "telemetry": _telemetry_to_host(snap.telemetry),
+            })
+        keep = set(self.steps)
+        for step in on_disk - keep:
+            shutil.rmtree(os.path.join(directory, f"step_{step:012d}"),
+                          ignore_errors=True)
+        return self.steps
+
+    def load(self, directory: str, like: Any) -> int:
+        """Refill the ring from a :meth:`save` spill (oldest first, newest
+        ``capacity`` kept).  ``like`` is the abstract train-state tree the
+        snapshots restore into; corrupt entries are skipped — the ring is a
+        best-effort optimization over the real checkpoint, never a reason
+        to fail a resume.  Returns the number of snapshots restored."""
+        from repro.checkpoint import checkpoint as ckpt_lib
+        steps = sorted(ckpt_lib.available_steps(directory))[-self.capacity:]
+        n = 0
+        for step in steps:
+            try:
+                tree, host = ckpt_lib.restore(directory, step, like)
+            except (ckpt_lib.CheckpointCorruption, ValueError):
+                continue
+            self._ring.append(Snapshot(
+                step=step,
+                tokens_seen=int(host.get("tokens_seen", 0)),
+                state=tree,
+                controller=dict(host.get("controller", {})),
+                telemetry=_telemetry_from_host(host.get("telemetry", {}))))
+            n += 1
+        return n
 
 
 class RecoveryRegulator(Regulator):

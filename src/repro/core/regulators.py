@@ -58,7 +58,14 @@ class StepTelemetry:
     """What every regulator sees.  ``step``/``tokens_seen`` are the exact
     host-side counters; the float fields are the *last completed* step's
     observations when planning (NaN before the first step) and the current
-    step's observations in ``observe``."""
+    step's observations in ``observe``.
+
+    ``per_leaf`` (opt-in via ``OptimizerConfig.telemetry_level ==
+    "per_leaf"``) carries the fixed-size named vectors the optimizer chain
+    reduced inside the jitted step — ``var_max`` / ``grad_norm`` /
+    ``update_norm`` / ``param_norm`` / ``grad_to_weight``, each
+    ``(n_leaves,)`` in ``leaf_labels`` order — so regulators can act on
+    *which* parameter group is excursing rather than one global scalar."""
 
     step: int = 0
     tokens_seen: int = 0
@@ -67,6 +74,8 @@ class StepTelemetry:
     grad_norm: float = float("nan")
     var_max: float = float("nan")
     var_l1: float = float("nan")
+    per_leaf: Optional[Dict[str, np.ndarray]] = None
+    leaf_labels: Tuple[str, ...] = ()
 
 
 @dataclass
@@ -254,38 +263,99 @@ class VarianceLRThrottle(Regulator):
     """Warmup-free LR control (beyond-paper): back the LR off
     multiplicatively while the Adam variance max spikes above ``gate`` x its
     trailing mean — the paper's §3 spike precursor — and recover when calm.
-    Also tightens the grad clip by the same factor while throttled."""
+    Also tightens the grad clip by the same factor while throttled.
+
+    When the step runs with per-leaf telemetry, the gate is evaluated
+    *per parameter group* against per-leaf trailing means (Molybog et
+    al.'s per-component precursor), and ``blamed`` names the group with
+    the largest excursion ratio — the answer to "which layer is unstable"
+    that the global scalar could never give."""
 
     name = "var_lr_throttle"
+
+    # per-leaf vectors the gate watches: ``var_max`` is the paper's spike
+    # precursor; ``grad_norm`` is reduced from the *raw* (pre-clip) grads,
+    # so a gradient explosion the global clip normalizes away — invisible
+    # to the Adam variance — still trips the gate and names its leaf
+    GATE_KEYS = ("var_max", "grad_norm")
 
     def __init__(self, spec: RegulatorSpec):
         self.spec = spec
         self.scale = 1.0
         self.trailing = 0.0
+        self.leaf_trailing: Dict[str, np.ndarray] = {}
+        self.blamed = ""
+        self.blamed_ratio = 0.0
 
     def plan(self, tele: StepTelemetry, plan: StepPlan) -> StepPlan:
         plan.lr *= self.scale
         plan.grad_clip_scale *= self.scale
         return plan
 
+    def _observe_per_leaf(self, tele: StepTelemetry) -> Optional[bool]:
+        """Per-leaf gate.  Returns None when per-leaf telemetry is absent
+        or unusable, else whether any leaf excursed (and records blame)."""
+        if tele.per_leaf is None:
+            return None
+        usable = spiking = False
+        for key in self.GATE_KEYS:
+            v = tele.per_leaf.get(key)
+            if v is None:
+                continue
+            v = np.asarray(v, np.float64)
+            if not np.all(np.isfinite(v)):
+                continue
+            usable = True
+            trail = self.leaf_trailing.get(key)
+            if trail is None or trail.shape != v.shape:
+                self.leaf_trailing[key] = v.copy()
+                continue
+            ratios = v / np.maximum(trail, 1e-30)
+            if bool(np.any(ratios > self.spec.gate)):
+                spiking = True
+                if float(np.max(ratios)) > self.blamed_ratio:
+                    # keep the blame of the *largest* excursion seen, not
+                    # the latest: the layer that started a divergence spikes
+                    # orders of magnitude harder than the downstream
+                    # turbulence it causes
+                    from repro.core.telemetry import blame
+                    worst = blame(tele.leaf_labels, ratios)
+                    if worst:
+                        self.blamed = worst
+                        self.blamed_ratio = float(np.max(ratios))
+            self.leaf_trailing[key] = 0.9 * trail + 0.1 * v
+        return spiking if usable else None
+
     def observe(self, tele: StepTelemetry, tokens_step: int) -> None:
+        spiking = self._observe_per_leaf(tele)
         v = tele.var_max
-        if not math.isfinite(v):
-            return
-        if self.trailing == 0.0:
-            self.trailing = v
-        if v > self.spec.gate * self.trailing:
+        if spiking is None:
+            if not math.isfinite(v):
+                return
+            if self.trailing == 0.0:
+                self.trailing = v
+            spiking = v > self.spec.gate * self.trailing
+            self.trailing = 0.9 * self.trailing + 0.1 * v
+        if spiking:
             self.scale = max(self.scale * self.spec.backoff, self.spec.floor)
         else:
             self.scale = min(self.scale * self.spec.recovery, 1.0)
-        self.trailing = 0.9 * self.trailing + 0.1 * v
 
     def state_dict(self) -> Dict[str, Any]:
-        return {"scale": self.scale, "trailing": self.trailing}
+        return {"scale": self.scale, "trailing": self.trailing,
+                "leaf_trailing": {k: v.tolist()
+                                  for k, v in self.leaf_trailing.items()},
+                "blamed": self.blamed, "blamed_ratio": self.blamed_ratio}
 
     def load_state_dict(self, d: Dict[str, Any]) -> None:
         self.scale = float(d["scale"])
         self.trailing = float(d["trailing"])
+        lt = d.get("leaf_trailing")
+        self.leaf_trailing = ({k: np.asarray(v, np.float64)
+                               for k, v in lt.items()}
+                              if isinstance(lt, dict) else {})
+        self.blamed = str(d.get("blamed", ""))
+        self.blamed_ratio = float(d.get("blamed_ratio", 0.0))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,119 @@
+"""Per-parameter instability telemetry: the label pass + leaf reductions.
+
+The paper's Section 3 analysis (and Molybog et al.'s Adam-instability
+theory in PAPERS.md) predicts that a loss spike is heralded by extreme
+values of the Adam variance state in *specific components* of the model —
+the time-domain correlation of per-layer gradient/update components is the
+precursor.  The trainer historically reduced that signal to two global
+scalars (``var_max``/``var_l1``), so regulators and the recovery controller
+could only act blindly on the whole model.
+
+This module is the per-parameter layer underneath:
+
+* :func:`param_labels` — a deterministic labeling pass over any model-zoo
+  parameter pytree.  Labels are the tree paths (``layers/attn/wq``), in
+  ``tree_leaves`` order, so a ``(n_leaves,)`` vector reduced inside the
+  jitted step lines up with the labels host-side.  Because the model zoo
+  stacks layers on a leading scan axis, one leaf *is* one layer-group of
+  the network — exactly the granularity the per-layer blame needs.
+* :func:`leaf_norms` / :func:`leaf_var_max` — the fixed-size named-vector
+  reductions the optimizer chain emits when
+  ``OptimizerConfig.telemetry_level == "per_leaf"``.
+* :class:`PerLeafStats` helpers — host-side conversion between the jitted
+  step's vectors and JSON-serializable dicts (the checkpointed
+  ``ControllerState`` and the ``--metrics-jsonl`` rows both carry them).
+
+``variance_stats``/``momentum_stats`` (the legacy global scalars) stay in
+``core.stability``; everything here is additive and opt-in.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+# keys of the per-leaf vectors the optimizer chain may emit in its metrics
+# dict (each value is a (n_leaves,) f32 vector in param_labels order)
+PER_LEAF_KEYS = ("leaf_var_max", "leaf_grad_norm", "leaf_update_norm",
+                 "leaf_param_norm")
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def param_labels(params: Any) -> Tuple[str, ...]:
+    """Deterministic leaf labels for a parameter pytree, in the same order
+    ``jax.tree_util.tree_leaves`` flattens it (so jitted per-leaf vectors
+    line up host-side)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    return tuple("/".join(_path_str(p) for p in path) for path, _ in flat)
+
+
+def leaf_norms(tree: Any) -> jax.Array:
+    """(n_leaves,) vector of per-leaf l2 norms, f32."""
+    return jnp.stack([
+        jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32))))
+        for x in jax.tree_util.tree_leaves(tree)])
+
+
+def leaf_var_max(v_tree: Any) -> jax.Array:
+    """(n_leaves,) vector of per-leaf max sqrt(v) — the paper's Fig. 1
+    series, one entry per labeled parameter group."""
+    return jnp.stack([
+        jnp.max(jnp.sqrt(x.astype(jnp.float32)))
+        for x in jax.tree_util.tree_leaves(v_tree)])
+
+
+# ---------------------------------------------------------------------------
+# host-side plumbing
+# ---------------------------------------------------------------------------
+
+def split_metrics(metrics: Dict[str, Any]
+                  ) -> Tuple[Dict[str, Any], Optional[Dict[str, np.ndarray]]]:
+    """Split a jitted step's metrics dict into (scalars, per-leaf vectors).
+
+    The per-leaf vectors are renamed without their ``leaf_`` prefix and a
+    derived ``grad_to_weight`` ratio is added when both norms are present.
+    Returns ``(scalars, None)`` when the step ran at scalar telemetry level.
+    """
+    scalars = {k: v for k, v in metrics.items() if k not in PER_LEAF_KEYS}
+    vectors = {k[len("leaf_"):]: np.asarray(jax.device_get(metrics[k]),
+                                            np.float32)
+               for k in PER_LEAF_KEYS if k in metrics}
+    if not vectors:
+        return scalars, None
+    if "grad_norm" in vectors and "param_norm" in vectors:
+        vectors["grad_to_weight"] = (
+            vectors["grad_norm"] / np.maximum(vectors["param_norm"], 1e-12))
+    return scalars, vectors
+
+
+def per_leaf_to_host(per_leaf: Optional[Dict[str, np.ndarray]]
+                     ) -> Optional[Dict[str, List[float]]]:
+    """JSON-serializable form (checkpoints, JSONL rows)."""
+    if per_leaf is None:
+        return None
+    return {k: np.asarray(v, np.float64).tolist() for k, v in per_leaf.items()}
+
+
+def per_leaf_from_host(d: Optional[Dict[str, Any]]
+                       ) -> Optional[Dict[str, np.ndarray]]:
+    if d is None:
+        return None
+    return {k: np.asarray(v, np.float32) for k, v in d.items()}
+
+
+def blame(labels: Tuple[str, ...], ratios: np.ndarray) -> str:
+    """Name the leaf with the largest excursion ratio (empty when the
+    shapes don't line up — e.g. telemetry from a different model)."""
+    if not labels or ratios.shape[0] != len(labels):
+        return ""
+    return labels[int(np.argmax(ratios))]

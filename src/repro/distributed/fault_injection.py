@@ -18,6 +18,13 @@ Fault kinds (CLI syntax ``kind@step[:arg]``, comma-separated):
                           loss-ratio spike precursor.
 * ``stall@8:0.25``      — sleep ``arg`` seconds before step 8 (straggler;
                           feeds the StepWatchdog).
+* ``grad_spike@15:64|attn`` — scale the raw gradients of every param leaf
+                          whose label contains ``attn`` by 64 for step 15
+                          only (``factor|leaf_substr``; substring empty or
+                          omitted = one deterministically-chosen leaf).
+                          Unlike ``spike`` this targets *one block's
+                          gradients*, so per-leaf telemetry must name the
+                          poisoned group — the per-layer-blame drill.
 * ``crash@30:post_tmp`` — raise :class:`InjectedCrash` from inside the
                           checkpoint writer at step 30, at the named crash
                           point: ``post_tmp`` (payload + manifest written,
@@ -50,7 +57,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-KINDS = ("nan_grad", "spike", "stall", "crash")
+KINDS = ("nan_grad", "spike", "grad_spike", "stall", "crash")
 CRASH_POINTS = ("post_tmp", "post_rename")
 
 
@@ -138,6 +145,23 @@ class FaultInjector:
         if s is not None:
             trainer.state = self.scale_params(trainer.state, step,
                                               float(s.arg or 8.0))
+        s = self._take("grad_spike", step)
+        if s is not None:
+            factor, _, substr = (s.arg or "64").partition("|")
+            trainer._pending_grad_fault = (float(factor or 64.0), substr)
+
+    def grad_scale_vector(self, labels: Sequence[str], step: int,
+                          factor: float, substr: str) -> np.ndarray:
+        """(n_leaves,) multiplier vector for a ``grad_spike``: ``factor`` on
+        every leaf whose label contains ``substr`` (one deterministically-
+        chosen leaf when the substring is empty or matches nothing)."""
+        scale = np.ones(len(labels), np.float32)
+        hit = [i for i, lb in enumerate(labels) if substr and substr in lb]
+        if not hit:
+            rng = self._rng(FaultSpec("grad_spike", step))
+            hit = [rng.randint(len(labels))]
+        scale[hit] = factor
+        return scale
 
     def poison_params(self, state: Any, step: int) -> Any:
         """NaN one deterministically-chosen parameter element."""

@@ -15,7 +15,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig, OptimizerConfig
 from repro.distributed.sharding import ShardingRules, use_rules
 from repro.models import model_zoo
-from repro.optim import adam
+from repro.optim import transforms as optim_tx
 
 
 # ---------------------------------------------------------------------------
@@ -23,24 +23,36 @@ from repro.optim import adam
 # ---------------------------------------------------------------------------
 
 def make_train_step(model, opt_cfg: OptimizerConfig,
-                    rules: Optional[ShardingRules] = None):
+                    rules: Optional[ShardingRules] = None,
+                    optimizer: Optional[optim_tx.GradientTransform] = None):
     # `clip_scale` is a runtime scalar so regulators (e.g. the variance LR
     # throttle) can tighten the clip per step without recompiling; callers
-    # that never pass it get the config constant.
-    def train_step(state, batch, lr, clip_scale=1.0):
+    # that never pass it get the config constant.  `grad_scale`, when not
+    # None, is a (n_leaves,) runtime vector multiplied onto the raw
+    # per-leaf gradients pre-clip — the fault injector's hook for targeting
+    # one block's gradients (and a future per-leaf runtime control surface).
+    tx = optimizer if optimizer is not None else \
+        optim_tx.build_optimizer(opt_cfg)
+
+    def train_step(state, batch, lr, clip_scale=1.0, grad_scale=None):
         with use_rules(rules):
             def loss_fn(p):
                 return model.loss(p, batch)
 
             (loss, metrics), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(state["params"])
-            grads, gnorm = adam.clip_by_global_norm(
-                grads, opt_cfg.grad_clip * clip_scale)
-            new_params, new_opt, telemetry = adam.adamw_update(
-                state["params"], grads, state["opt"], lr, opt_cfg)
+            if grad_scale is not None:
+                leaves, td = jax.tree_util.tree_flatten(grads)
+                leaves = [g * grad_scale[i].astype(g.dtype)
+                          for i, g in enumerate(leaves)]
+                grads = jax.tree_util.tree_unflatten(td, leaves)
+            updates, new_opt, telemetry = tx.update(
+                grads, state["opt"], state["params"],
+                {"lr": lr, "clip_scale": clip_scale})
+            new_params = optim_tx.apply_updates(state["params"], updates)
         new_state = {"params": new_params, "opt": new_opt,
                      "step": state["step"] + 1}
-        out = {**metrics, **telemetry, "grad_norm": gnorm, "lr": lr}
+        out = {**metrics, **telemetry, "lr": lr}
         return new_state, out
 
     return train_step
@@ -64,15 +76,25 @@ def make_serve_step(model, rules: Optional[ShardingRules] = None):
 # abstract state + sharding trees
 # ---------------------------------------------------------------------------
 
-def abstract_train_state(cfg: ModelConfig) -> Dict[str, Any]:
+def abstract_train_state(cfg: ModelConfig,
+                         opt_cfg: Optional[OptimizerConfig] = None
+                         ) -> Dict[str, Any]:
+    """Shape tree of the train state.  ``opt_cfg`` selects the optimizer
+    chain whose state rides under ``"opt"`` (default chain when omitted —
+    the chain-format AdamW every legacy call site means)."""
     params = model_zoo.abstract_params(cfg)
-    return {"params": params, "opt": adam.abstract_opt_state(params),
+    tx = optim_tx.build_optimizer(opt_cfg or OptimizerConfig())
+    return {"params": params,
+            "opt": optim_tx.abstract_chain_state(tx, params),
             "step": jax.ShapeDtypeStruct((), jnp.int32)}
 
 
-def init_train_state(rng, cfg: ModelConfig) -> Dict[str, Any]:
+def init_train_state(rng, cfg: ModelConfig,
+                     opt_cfg: Optional[OptimizerConfig] = None
+                     ) -> Dict[str, Any]:
     params = model_zoo.init_params(rng, cfg)
-    return {"params": params, "opt": adam.init_opt_state(params),
+    tx = optim_tx.build_optimizer(opt_cfg or OptimizerConfig())
+    return {"params": params, "opt": tx.init(params),
             "step": jnp.zeros((), jnp.int32)}
 
 
@@ -90,14 +112,43 @@ def _shard_tree(rules: ShardingRules, axes_tree, shape_tree, kind: str):
                                   is_leaf=is_axes_leaf)
 
 
-def train_state_shardings(rules: ShardingRules, cfg: ModelConfig):
+def train_state_shardings(rules: ShardingRules, cfg: ModelConfig,
+                          opt_cfg: Optional[OptimizerConfig] = None):
     axes = model_zoo.param_axes(cfg)
     shapes = model_zoo.abstract_params(cfg)
     p_sh = _shard_tree(rules, axes, shapes, "param")
     replicated = NamedSharding(rules.mesh, P())
     return {"params": p_sh,
-            "opt": {"m": p_sh, "v": p_sh, "count": replicated},
+            "opt": _opt_state_shardings(cfg, opt_cfg, shapes, p_sh,
+                                        replicated),
             "step": replicated}
+
+
+def _opt_state_shardings(cfg: ModelConfig,
+                         opt_cfg: Optional[OptimizerConfig],
+                         params_abs, p_sh, replicated):
+    """Shardings for the optimizer-chain state: any ``m``/``v`` subtree
+    that mirrors the param pytree (Adam/SM3 momenta, nested or not) takes
+    the param shardings leaf for leaf; everything else (counts, SM3
+    accumulators, Shampoo Kronecker statistics) is replicated."""
+    tx = optim_tx.build_optimizer(opt_cfg or OptimizerConfig())
+    abs_opt = optim_tx.abstract_chain_state(tx, params_abs)
+    # param sharding looked up by the tree-path suffix after an m/v marker
+    p_by_path = {tuple(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path): sh
+                 for path, sh in
+                 jax.tree_util.tree_flatten_with_path(p_sh)[0]}
+
+    def one(path, _sds):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        for i, k in enumerate(keys):
+            if k in ("m", "v") and tuple(keys[i + 1:]) in p_by_path:
+                return p_by_path[tuple(keys[i + 1:])]
+        return replicated
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abs_opt)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(path, sds) for path, sds in flat])
 
 
 def batch_shardings(rules: ShardingRules, cfg: ModelConfig, specs):

@@ -26,6 +26,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import math
+import os
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -39,6 +40,7 @@ from repro.configs import get_arch, reduced as reduce_cfg
 from repro.configs.base import (
     BatchWarmupConfig, OptimizerConfig, RegulatorSpec, SLWConfig, TrainConfig)
 from repro.core import LossRatioTracker
+from repro.core import telemetry as telemetry_lib
 from repro.core.recovery import (RecoveryConfig, RecoveryHook,
                                  RecoveryRegulator, RollbackController)
 from repro.core.regulators import (ControllerState, RegulatorStack, StepPlan,
@@ -174,6 +176,7 @@ class MetricsJsonlHook(TrainerHook):
     def __init__(self, path: str):
         self.path = path
         self._fh = None
+        self._wrote_labels = False
 
     def on_run_start(self, tr: "Trainer") -> None:
         self._fh = open(self.path, "a", buffering=1)
@@ -189,6 +192,13 @@ class MetricsJsonlHook(TrainerHook):
                      "lr": plan.lr,
                      "grad_clip_scale": plan.grad_clip_scale},
         }
+        if tele.per_leaf is not None:
+            # per-leaf vectors in leaf_labels order; the labels themselves
+            # are written once (first per-leaf row), not per step
+            row["per_leaf"] = telemetry_lib.per_leaf_to_host(tele.per_leaf)
+            if not self._wrote_labels:
+                row["leaf_labels"] = list(tele.leaf_labels)
+                self._wrote_labels = True
         self._fh.write(json.dumps(row) + "\n")
 
     def on_run_end(self, tr: "Trainer") -> None:
@@ -270,7 +280,10 @@ class Trainer:
         self.model = model_zoo.build_model(cfg, dtype=jnp.float32,
                                            remat=tc.remat)
         rng = jax.random.PRNGKey(tc.seed)
-        self.state = steps_lib.init_train_state(rng, cfg)
+        self.state = steps_lib.init_train_state(rng, cfg, tc.optimizer)
+        # leaf labels for per-parameter telemetry / per-layer blame: fixed
+        # for the run (tree structure never changes), computed once
+        self.leaf_labels = telemetry_lib.param_labels(self.state["params"])
 
         corpus = SyntheticCorpus(vocab_size=cfg.vocab_size,
                                  seq_len=tc.seq_len, seed=tc.seed)
@@ -296,18 +309,25 @@ class Trainer:
         self._drain_requested = False
         self._last = StepTelemetry()
         self._seen_shapes = set()
+        # set by the fault injector (grad_spike) for the next step only
+        self.fault_injector = fault_injector
+        self._pending_grad_fault: Optional[Tuple[float, str]] = None
 
         # divergence-aware recovery: the intervention regulator joins the
         # stack (so its state checkpoints through ControllerState) and the
         # rollback controller rides the hook list
         self.recovery: Optional[RollbackController] = None
         self._recovery_reg: Optional[RecoveryRegulator] = None
+        self._ring_dir = ""
         if recovery is not None:
             ladder = (self.stack["seqlen"].curriculum.ladder
                       if "seqlen" in self.stack else (tc.seq_len,))
             self._recovery_reg = RecoveryRegulator(ladder, recovery)
             self.stack.regulators.append(self._recovery_reg)
             self.recovery = RollbackController(recovery)
+            self._ring_dir = recovery.ring_dir or (
+                os.path.join(tc.checkpoint_dir, "ring")
+                if tc.checkpoint_dir else "")
 
         # `hooks` extends the defaults (it does not replace them — drain/
         # callback/eval would silently stop working otherwise)
@@ -353,7 +373,8 @@ class Trainer:
         """Restore the latest checkpoint, if any.  Returns its step."""
         if self.ckpt is None:
             return None
-        like = steps_lib.abstract_train_state(self.tc.model)
+        like = steps_lib.abstract_train_state(self.tc.model,
+                                              self.tc.optimizer)
         got_step, got_state, host = self.ckpt.restore_latest(like)
         if got_step is None:
             return None
@@ -362,6 +383,12 @@ class Trainer:
         self.load_controller_state(ControllerState.from_host(
             host["controller"]))
         self.result.restored_from_step = got_step
+        # a drained run spilled its in-run rollback ring next to the
+        # checkpoint — refill it so recovery resumes with the same restore
+        # points it had when the preemption landed
+        if self.recovery is not None and self._ring_dir \
+                and os.path.isdir(self._ring_dir):
+            self.recovery.ring.load(self._ring_dir, like)
         return got_step
 
     # -- one training step ---------------------------------------------------
@@ -381,9 +408,26 @@ class Trainer:
             self._seen_shapes.add(shape_key)
             self.result.n_compiles += 1
 
-        self.state, metrics = self.step_fn(
-            self.state, batch, np.float32(plan.lr),
-            np.float32(plan.grad_clip_scale))
+        # grad_spike fault: a one-step (n_leaves,) multiplier on the raw
+        # per-leaf gradients (None on clean steps keeps the common trace)
+        grad_scale = None
+        if self._pending_grad_fault is not None \
+                and self.fault_injector is not None:
+            factor, substr = self._pending_grad_fault
+            self._pending_grad_fault = None
+            grad_scale = self.fault_injector.grad_scale_vector(
+                self.leaf_labels, self.step, factor, substr)
+        if grad_scale is None:
+            self.state, metrics = self.step_fn(
+                self.state, batch, np.float32(plan.lr),
+                np.float32(plan.grad_clip_scale))
+        else:
+            self.state, metrics = self.step_fn(
+                self.state, batch, np.float32(plan.lr),
+                np.float32(plan.grad_clip_scale), grad_scale)
+        # per-leaf vectors (telemetry_level == "per_leaf") ride StepTelemetry,
+        # not the scalar metrics dict the hooks float()
+        metrics, per_leaf = telemetry_lib.split_metrics(metrics)
         loss = float(metrics["loss"])
         ratio = (self.tracker.update(loss) if math.isfinite(loss)
                  else float("inf"))
@@ -391,7 +435,9 @@ class Trainer:
             tele, loss=loss, loss_ratio=ratio,
             grad_norm=float(metrics["grad_norm"]),
             var_max=float(metrics["var_max"]),
-            var_l1=float(metrics["var_l1"]))
+            var_l1=float(metrics["var_l1"]),
+            per_leaf=per_leaf,
+            leaf_labels=self.leaf_labels if per_leaf is not None else ())
         self.stack.observe(post, tokens_step)
         self.step += 1
         self.tokens_seen += tokens_step
@@ -415,6 +461,11 @@ class Trainer:
                     h.on_step_start(self)
                 if self._drain_requested:
                     self.save_checkpoint()
+                    # spill the in-run rollback ring next to the checkpoint:
+                    # the restore points survive the preemption (resume()
+                    # refills the ring on --recover)
+                    if self.recovery is not None and self._ring_dir:
+                        self.recovery.ring.save(self._ring_dir)
                     self.result.drained = True
                     break
                 if (self.fail_at_step is not None
@@ -494,7 +545,11 @@ def build_config(args) -> TrainConfig:
         warmup_tokens=args.warmup * args.batch * args.seq,
         total_steps=args.steps,
         total_tokens=args.tokens or args.steps * args.batch * args.seq,
-        schedule=args.schedule, grad_clip=args.clip)
+        schedule=args.schedule, grad_clip=args.clip,
+        optimizer=args.optimizer, decay_mask=args.decay_mask,
+        agc_clip=args.agc,
+        telemetry_level=("per_leaf" if args.per_leaf_telemetry
+                         else "scalar"))
     bw = BatchWarmupConfig(enabled=args.batch_warmup,
                            start_batch=max(args.batch // 8, 1),
                            warmup_tokens=(args.tokens or args.steps
@@ -536,6 +591,20 @@ def main(argv=None) -> int:
     p.add_argument("--clip", type=float, default=1.0)
     p.add_argument("--schedule", default="token_cosine",
                    choices=["token_cosine", "step_cosine", "constant"])
+    p.add_argument("--optimizer", default="adamw",
+                   choices=["adamw", "sm3", "shampoo"],
+                   help="inner optimizer of the gradient-transform chain")
+    p.add_argument("--decay-mask", default="all", choices=["all", "std"],
+                   help="'std' exempts 1-D/scalar leaves (norm gains, "
+                        "biases) from weight decay; 'all' is the legacy "
+                        "decay-everything behavior")
+    p.add_argument("--agc", type=float, default=0.0,
+                   help="adaptive gradient clipping threshold (per-leaf "
+                        "grad/param norm ratio; 0 disables)")
+    p.add_argument("--per-leaf-telemetry", action="store_true",
+                   help="per-parameter-group telemetry vectors (var_max/"
+                        "grad/update/param norms per labeled leaf) — feeds "
+                        "per-layer blame in regulators and recovery")
     p.add_argument("--slw", action="store_true")
     p.add_argument("--pacing", default="linear",
                    choices=["linear", "root", "two_stage", "variance_gated",

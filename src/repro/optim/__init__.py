@@ -5,6 +5,23 @@ from repro.optim.adam import (  # noqa: F401
     global_norm,
     init_opt_state,
 )
+from repro.optim.transforms import (  # noqa: F401
+    GradientTransform,
+    abstract_chain_state,
+    adaptive_grad_clip,
+    add_decayed_weights,
+    apply_updates,
+    build_optimizer,
+    chain,
+    clip_global_norm,
+    decay_mask_tree,
+    migrate_opt_state,
+    scale_by_adam,
+    scale_by_lr,
+    scale_by_shampoo,
+    scale_by_sm3,
+    scale_per_leaf,
+)
 from repro.optim.compression import (  # noqa: F401
     compressed_allreduce,
     ef_compress_tree,

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import OptimizerConfig
+from repro.core.stability import momentum_stats, variance_stats
 
 
 def init_opt_state(params: Any) -> Dict[str, Any]:
@@ -60,13 +61,15 @@ def adamw_update(params: Any, grads: Any, opt_state: Dict[str, Any],
         lambda v, g: b2 * v + (1.0 - b2) * jnp.square(g),
         opt_state["v"], grads)
 
-    def upd(p, m, v):
+    def upd(p, m, v, decay):
         mhat = m / bc1
         vhat = v / bc2
-        step = mhat / (jnp.sqrt(vhat) + eps) + cfg.weight_decay * p
+        step = mhat / (jnp.sqrt(vhat) + eps) \
+            + (cfg.weight_decay * p if decay else 0.0)
         return (p - lr * step).astype(p.dtype)
 
-    new_params = jax.tree_util.tree_map(upd, params, new_m, new_v)
-    from repro.core.stability import momentum_stats, variance_stats
+    from repro.optim.transforms import decay_mask_tree
+    mask = decay_mask_tree(params, cfg.decay_mask)
+    new_params = jax.tree_util.tree_map(upd, params, new_m, new_v, mask)
     telemetry = {**variance_stats(new_v), **momentum_stats(new_m)}
     return new_params, {"m": new_m, "v": new_v, "count": count}, telemetry

@@ -259,3 +259,80 @@ def test_escalation_ladder_engages_in_order():
     assert reg.lr_scale == pytest.approx(0.125)
     assert reg.seq_drop == 2
     assert reg.data_offset == RecoveryConfig().skip_window_steps
+
+
+# ---------------------------------------------------------------------------
+# ring persistence across a drain (preemption survival)
+# ---------------------------------------------------------------------------
+
+def test_state_ring_survives_drain_and_resume(tmp_path):
+    """A drained run spills the in-run rollback ring to disk next to the
+    checkpoint; --recover resume refills it with the same restore points
+    (steps, state arrays, telemetry) it had when the preemption landed."""
+    import os
+
+    d = str(tmp_path / "ck")
+    tc = _tc(steps=30, ckpt_dir=d, interval=0)
+
+    class StopAt:
+        def on_run_start(self, tr):
+            pass
+
+        def on_step_start(self, tr):
+            if tr.step >= 9:
+                tr.request_drain()
+
+        def on_step_end(self, tr, tele, plan, metrics):
+            pass
+
+        def on_run_end(self, tr):
+            pass
+
+        def close(self):
+            pass
+
+    tr = Trainer(tc, recovery=RecoveryConfig(snapshot_interval=3),
+                 hooks=[StopAt()])
+    res = tr.run()
+    assert res.drained
+    ring_dir = os.path.join(d, "ring")
+    assert sorted(os.listdir(ring_dir)) == [
+        f"step_{s:012d}" for s in tr.recovery.ring.steps]
+
+    tr2 = Trainer(tc, recovery=RecoveryConfig(snapshot_interval=3))
+    assert tr2.resume() == 9
+    assert tr2.recovery.ring.steps == tr.recovery.ring.steps
+    a = tr.recovery.ring.newest()
+    b = tr2.recovery.ring.newest()
+    assert b.tokens_seen == a.tokens_seen
+    assert b.telemetry.step == a.telemetry.step
+    assert b.telemetry.loss == pytest.approx(a.telemetry.loss)
+    for x, y in zip(jax.tree_util.tree_leaves(a.state),
+                    jax.tree_util.tree_leaves(b.state)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    # and the resumed run continues to completion from those restore points
+    res2 = tr2.run()
+    assert res2.steps == 30 and not res2.diverged
+
+
+def test_state_ring_load_skips_corrupt_entry(tmp_path):
+    """Ring restore is best-effort: a corrupt spilled snapshot is skipped,
+    not fatal (the real checkpoint is the durable artifact)."""
+    import os
+
+    d = str(tmp_path / "ring")
+    tc = _tc(steps=4)
+    tr = Trainer(tc)
+    ring = StateRing(capacity=3)
+    for s in (2, 4):
+        ring.push(s, s * 10, tr.state, tr.controller_state(), tr._last)
+    ring.save(d)
+    # corrupt the newest entry's payload
+    inj = FaultInjector(seed=0)
+    inj.corrupt_checkpoint(d, step=4)
+
+    from repro.launch import steps as steps_lib
+    like = steps_lib.abstract_train_state(tc.model, tc.optimizer)
+    ring2 = StateRing(capacity=3)
+    assert ring2.load(d, like) == 1
+    assert ring2.steps == [2]
