@@ -1,0 +1,261 @@
+"""Gradient-noise-scale benchmark: estimator accuracy, in-step measurement
+overhead, and the pre-spike forecast lead time, self-gated for CI.
+
+Rows:
+  gns/estimator        unbiased B_noise estimate on a synthetic problem with
+                       known gradient mean/covariance (analytic B_noise =
+                       tr(Sigma)/|G|^2); gates the relative error
+  gns/step_overhead    jitted train-step time with the in-step GNS
+                       measurement on vs off (interleaved medians); gates
+                       the estimator overhead < 5% (`overhead_ok=True`)
+  gns/forecast_lead    injected slow-burn divergence: a sub-threshold
+                       perturbation (invisible to the loss/var gates)
+                       followed by an overt spike.  The direction-sketch
+                       precursor must fire from measurement alone in the
+                       window between them, giving a positive lead over the
+                       DivergenceDetector (`lead_ok=True`)
+  gns/clean_arm        same config, no faults: the precursor must stay
+                       silent (false-positive gate)
+  gns/critical_batch   B_noise-measured batch warmup on the bench corpus;
+                       derived shows the measured B_noise trajectory pulled
+                       back out of the --metrics-jsonl stream via
+                       telemetry.read_metrics_jsonl
+
+The fault matrix note: at this bench scale the landscape recovers from any
+single perturbation instead of self-amplifying, so the overt spike that
+the detector catches is injected at a known lag after the sub-threshold
+episode.  The *measured* quantity is still honest — the precursor has no
+access to the fault schedule and must fire from the realized gradient
+directions, and the clean arm gates it against firing on nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+import tempfile
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import BATCH, BENCH_MODEL, Row, SEQ, bench_config
+from repro.configs.base import GNSConfig, RegulatorSpec, TrainConfig
+from repro.core.recovery import RecoveryConfig
+from repro.core.telemetry import read_metrics_jsonl
+from repro.data import DataPipeline, SyntheticCorpus
+from repro.distributed.fault_injection import FaultInjector
+from repro.distributed.fault_tolerance import RetryPolicy
+from repro.gns import GNSEstimator, gns_estimates
+from repro.launch import steps as steps_lib
+from repro.launch.train import MetricsJsonlHook, train
+
+MAX_OVERHEAD = 0.05   # estimator step-time overhead gate vs baseline
+MIN_LEAD = 2          # precursor must precede the detector by >= this
+
+_EVENT_STEP = re.compile(r"@(\d+)\(")
+DETECTOR_KINDS = ("nan_loss", "nan_grad", "loss_spike", "var_excursion")
+
+
+def _gate(name: str, ok: bool, detail: str) -> None:
+    if not ok:
+        raise AssertionError(f"gns gate failed [{name}]: {detail}")
+
+
+def _event_step(ev: str) -> Optional[int]:
+    m = _EVENT_STEP.search(ev)
+    return int(m.group(1)) if m else None
+
+
+def _first_step(events, kinds) -> Optional[int]:
+    for ev in events:
+        if any(ev.startswith(k + "@") for k in kinds):
+            return _event_step(ev)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# estimator accuracy on a known-variance synthetic problem
+# ---------------------------------------------------------------------------
+
+def _estimator_row(quick: bool) -> Row:
+    """Per-sample gradients g = mu + sigma*eps with known mu, sigma: the
+    analytic noise scale is B_noise = tr(Sigma)/|G|^2 = n*sigma^2/|mu|^2.
+    The estimator only sees the (small, big) squared-norm pair per step —
+    exactly what the jitted step emits."""
+    rng = np.random.RandomState(0)
+    n, sigma, big, k = 256, 0.5, 64, 8
+    mu = rng.randn(n)
+    mu /= np.linalg.norm(mu)                      # |G|^2 = 1
+    true_b_noise = n * sigma ** 2                 # tr(Sigma)/|G|^2
+    est = GNSEstimator(ema_window=64, warmup_obs=8)
+    obs = 100 if quick else 300
+    t0 = time.time()
+    for _ in range(obs):
+        samples = mu + sigma * rng.randn(big, n)
+        shard_means = samples.reshape(k, big // k, n).mean(axis=1)
+        small_sq = float(np.mean(np.sum(shard_means ** 2, axis=1)))
+        big_sq = float(np.sum(samples.mean(axis=0) ** 2))
+        est.update(small_sq, big_sq, big // k, big)
+    us = (time.time() - t0) / obs * 1e6
+    rel_err = abs(est.b_noise - true_b_noise) / true_b_noise
+    # sanity: the raw unbiased formulas agree with the analytic expectations
+    g_sq, tr_sigma = gns_estimates(small_sq, big_sq, big // k, big)
+    _gate("estimator", rel_err < 0.2,
+          f"B_noise={est.b_noise:.1f} vs true {true_b_noise:.1f} "
+          f"(rel_err={rel_err:.3f})")
+    return ("gns/estimator", us,
+            f"b_noise={est.b_noise:.1f} true={true_b_noise:.1f} "
+            f"rel_err={rel_err:.3f} crit_batch={est.critical_batch()} "
+            f"accuracy_ok=True")
+
+
+# ---------------------------------------------------------------------------
+# in-step measurement overhead
+# ---------------------------------------------------------------------------
+
+def _overhead_row(quick: bool) -> Row:
+    """Median jitted step time, GNS estimator on vs off, interleaved so
+    machine drift hits both arms equally.  The sketch arm is reported but
+    not gated (the CI contract is the *estimator* overhead)."""
+    tc = bench_config(slw=False, steps=10)
+    model_cfg = BENCH_MODEL
+    from repro.models import model_zoo
+    model = model_zoo.build_model(model_cfg, dtype=jnp.float32, remat="none")
+    corpus = SyntheticCorpus(vocab_size=model_cfg.vocab_size, seq_len=SEQ,
+                             seed=1234)
+    batch = DataPipeline(corpus, BATCH, model_cfg=model_cfg).batch_at(0)
+
+    arms = [
+        ("base", None),
+        ("est", GNSConfig(enabled=True, shards=4, precursor_window=0)),
+        ("sketch", GNSConfig(enabled=True, shards=4, precursor_window=12)),
+    ]
+    fns, states, samples = {}, {}, {}
+    for name, gns in arms:
+        fns[name] = jax.jit(
+            steps_lib.make_train_step(model, tc.optimizer, gns=gns),
+            donate_argnums=(0,))
+        states[name] = steps_lib.init_train_state(
+            jax.random.PRNGKey(0), model_cfg, tc.optimizer)
+        # warmup compile
+        states[name], m = fns[name](states[name], batch, np.float32(1e-3),
+                                    np.float32(1.0))
+        jax.block_until_ready(m["loss"])
+        samples[name] = []
+    reps = 15 if quick else 40
+    for _ in range(reps):
+        for name, _gns in arms:
+            t0 = time.perf_counter()
+            states[name], m = fns[name](states[name], batch,
+                                        np.float32(1e-3), np.float32(1.0))
+            jax.block_until_ready(m["loss"])
+            samples[name].append(time.perf_counter() - t0)
+    med = {name: float(np.median(v)) for name, v in samples.items()}
+    overhead = med["est"] / med["base"] - 1.0
+    sketch_overhead = med["sketch"] / med["base"] - 1.0
+    _gate("step_overhead", overhead < MAX_OVERHEAD,
+          f"estimator overhead {overhead * 100:.1f}% >= "
+          f"{MAX_OVERHEAD * 100:.0f}% (base={med['base'] * 1e3:.1f}ms "
+          f"est={med['est'] * 1e3:.1f}ms)")
+    return ("gns/step_overhead", med["est"] * 1e6,
+            f"base={med['base'] * 1e3:.1f}ms est={overhead * 100:+.1f}% "
+            f"sketch={sketch_overhead * 100:+.1f}% "
+            f"gate<{MAX_OVERHEAD * 100:.0f}% overhead_ok=True")
+
+
+# ---------------------------------------------------------------------------
+# forecast lead on the injected fault matrix
+# ---------------------------------------------------------------------------
+
+def _lead_config(steps: int) -> TrainConfig:
+    return dataclasses.replace(
+        bench_config(slw=False, steps=steps, lr=1e-3),
+        gns=GNSConfig(enabled=True, shards=4))
+
+
+def _lead_rows(quick: bool) -> List[Row]:
+    steps = 32
+    sub, overt = 12, 22   # sub-threshold episode, then the overt spike
+    fault = f"spike@{sub}:2.0,spike@{overt}:32.0"
+    rec = RecoveryConfig(policy=RetryPolicy(max_retries=3))
+
+    t0 = time.time()
+    res = train(_lead_config(steps), quiet=True, recovery=rec,
+                fault_injector=FaultInjector.from_cli(fault, seed=0))
+    wall = time.time() - t0
+    pre_step = _first_step(res.precursor_events, ("precursor",))
+    det_step = _first_step(res.recovery_events, DETECTOR_KINDS)
+    _gate("forecast_lead", res.steps == steps,
+          f"completed {res.steps}/{steps}")
+    _gate("forecast_lead", det_step is not None,
+          f"detector never fired (events={res.recovery_events})")
+    _gate("forecast_lead", pre_step is not None,
+          f"precursor never fired (events={res.precursor_events})")
+    lead = det_step - pre_step
+    _gate("forecast_lead", lead >= MIN_LEAD,
+          f"lead {lead} < {MIN_LEAD} (precursor@{pre_step} "
+          f"detector@{det_step})")
+    lead_row = ("gns/forecast_lead", wall / steps * 1e6,
+                f"precursor@{pre_step} detector@{det_step} lead={lead} "
+                f"rollbacks={res.rollbacks} gate>={MIN_LEAD} lead_ok=True")
+
+    t0 = time.time()
+    clean = train(_lead_config(steps), quiet=True, recovery=rec)
+    wall = time.time() - t0
+    _gate("clean_arm", not clean.precursor_events,
+          f"false positive: {clean.precursor_events}")
+    _gate("clean_arm", clean.rollbacks == 0,
+          f"clean run rolled back: {clean.recovery_events}")
+    clean_row = ("gns/clean_arm", wall / steps * 1e6,
+                 f"precursor_events=0 rollbacks=0 over {steps} steps "
+                 f"quiet_ok=True")
+    return [lead_row, clean_row]
+
+
+# ---------------------------------------------------------------------------
+# B_noise-measured batch warmup
+# ---------------------------------------------------------------------------
+
+def _critical_batch_row(quick: bool) -> Row:
+    steps = 20 if quick else 30
+    tc = dataclasses.replace(
+        bench_config(slw=False, steps=steps, lr=1e-3),
+        gns=GNSConfig(enabled=True, shards=4, precursor_window=0,
+                      warmup_obs=4),
+        regulators=(RegulatorSpec(kind="critical_batch"),))
+    with tempfile.TemporaryDirectory(prefix="bench_gns_") as d:
+        path = os.path.join(d, "metrics.jsonl")
+        t0 = time.time()
+        res = train(tc, quiet=True, hooks=[MetricsJsonlHook(path)])
+        wall = time.time() - t0
+        _, rows = read_metrics_jsonl(path)
+    # recompute the measured B_noise trajectory from the streamed scalars
+    # (the same parse-back path the tests round-trip)
+    est = GNSEstimator(ema_window=tc.gns.ema_window,
+                       warmup_obs=tc.gns.warmup_obs)
+    for r in rows:
+        if "gns_small_sq" in r:
+            est.update(r["gns_small_sq"], r["gns_big_sq"],
+                       r["gns_b_small"], r["gns_b_big"])
+    b0, b1 = res.batch_history[0], res.batch_history[-1]
+    _gate("critical_batch", res.steps == steps,
+          f"completed {res.steps}/{steps}")
+    _gate("critical_batch", b1 >= b0,
+          f"batch shrank {b0} -> {b1}")
+    b_noise = est.b_noise
+    note = ("inf" if b_noise == float("inf") else f"{b_noise:.1f}")
+    return ("gns/critical_batch", wall / steps * 1e6,
+            f"batch {b0}->{b1} of {tc.global_batch} "
+            f"b_noise={note} jsonl_rows={len(rows)} "
+            f"final_loss={res.loss_history[-1]:.3f}")
+
+
+def run(quick: bool = False) -> List[Row]:
+    rows: List[Row] = [_estimator_row(quick), _overhead_row(quick)]
+    rows += _lead_rows(quick)
+    rows.append(_critical_batch_row(quick))
+    return rows

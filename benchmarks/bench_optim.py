@@ -13,6 +13,9 @@ Rows:
   optim/stability_*      spike/divergence stats at aggressive LR: baseline
                          vs AGC + per-leaf var-throttle (the survival arm
                          self-gates in its derived column)
+  optim/shampoo_staleness  steps since the last preconditioner eigh refresh
+                         as reported by the chain's telemetry — must sweep
+                         0..interval-1 and reset on refresh steps
 """
 from __future__ import annotations
 
@@ -73,6 +76,32 @@ def _parity_row(steps: int = 30) -> Row:
             f"max_param_delta={delta:.3g} over {steps} steps [{ok}]")
 
 
+def _shampoo_staleness_row(steps: int = 12, interval: int = 5) -> Row:
+    """Drive the shampoo chain and read back the ``shampoo_staleness``
+    telemetry: steps since the last eigh refresh.  All blocks share the
+    count-keyed refresh cadence, so the scalar must sweep 0..interval-1
+    and snap back to 0 on every refresh step."""
+    cfg = OptimizerConfig(optimizer="shampoo", shampoo_interval=interval)
+    tx = build_optimizer(cfg)
+    rng = np.random.RandomState(1)
+    p = {"w": jnp.asarray(rng.randn(32, 32), jnp.float32)}
+    st = tx.init(p)
+    series = []
+    t0 = time.time()
+    for _ in range(steps):
+        g = {"w": jnp.asarray(rng.randn(32, 32), jnp.float32)}
+        u, st, tel = tx.update(g, st, p, {"lr": jnp.float32(1e-3),
+                                          "clip_scale": jnp.float32(1.0)})
+        p = apply_updates(p, u)
+        series.append(int(tel["shampoo_staleness"]))
+    us = (time.time() - t0) / steps * 1e6
+    want = [s % interval for s in range(steps)]
+    ok = "OK" if series == want else "FAIL"
+    return ("optim/shampoo_staleness", us,
+            f"interval={interval} max_staleness={max(series)} "
+            f"series_head={series[:interval + 1]} [{ok}]")
+
+
 def _with_throttle(tc):
     return dataclasses.replace(
         tc, regulators=auto_specs(tc)
@@ -108,6 +137,9 @@ def run(quick: bool = False) -> List[Row]:
 
     # -- chain-vs-legacy parity ----------------------------------------------
     rows.append(_parity_row())
+
+    # -- shampoo preconditioner staleness ------------------------------------
+    rows.append(_shampoo_staleness_row())
 
     # -- stability: AGC + per-leaf throttle vs baseline at aggressive LR -----
     base_tc = _arm_cfg(steps, lr=AGGRESSIVE_LR)

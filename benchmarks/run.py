@@ -30,6 +30,7 @@ SUITES = [
     ("serve", "benchmarks.bench_serve"),
     ("roofline", "benchmarks.bench_roofline"),
     ("chaos", "benchmarks.bench_chaos"),
+    ("gns", "benchmarks.bench_gns"),
 ]
 
 

@@ -185,6 +185,12 @@ class RegulatorSpec:
       var_lr_throttle   — multiplicative LR/grad-clip backoff while the Adam
                           variance max spikes above its trailing mean
                           (Kosson et al.-style warmup-free LR control)
+      critical_batch    — B_noise-measured batch warmup (repro.gns): grow
+                          the batch while the measured gradient noise scale
+                          exceeds ``TrainConfig.gns.headroom`` x the current
+                          batch, hold otherwise.  Supersedes the
+                          grad_noise_batch grad-norm-EMA proxy; reads its
+                          parameters from ``TrainConfig.gns``.
     """
 
     kind: str
@@ -198,6 +204,52 @@ class RegulatorSpec:
     floor: float = 0.1  # never scale LR below floor * scheduled
     backoff: float = 0.5  # scale *= backoff on a spike
     recovery: float = 1.2  # scale *= recovery per calm step (capped at 1)
+
+
+@dataclass(frozen=True)
+class GNSConfig:
+    """Gradient-noise-scale measurement + pre-spike forecasting (repro.gns).
+
+    ``enabled`` turns on the in-step estimator: the batch is viewed as
+    ``shards`` emulated data-parallel replicas inside the jitted train step
+    and the per-shard/full-batch gradient-norm pair feeds the unbiased
+    ``B_noise = tr(Sigma)/|G|^2`` estimate (McCandlish et al.).  The
+    precursor fields parameterize the Molybog et al.-style time-lagged
+    autocorrelation of per-leaf gradient *directions* (random-sign sketches
+    in a short ring) that forecasts a loss spike before the detector's
+    var/norm excursion fires.  The critical-batch fields drive the
+    ``critical_batch`` regulator kind (B_noise-measured batch warmup).
+    """
+
+    enabled: bool = False
+    # emulated per-replica shard count for the small-batch estimator (the
+    # realized count is the largest divisor of the step's batch <= this)
+    shards: int = 4
+    # EMA horizon (steps) for the |G|^2 / tr(Sigma) numerator+denominator
+    ema_window: int = 32
+    # observations before B_noise is considered warmed up
+    warmup_obs: int = 8
+    # --- critical_batch regulator -------------------------------------
+    min_batch: int = 0        # 0 -> full_batch // 8
+    headroom: float = 2.0     # grow batch while B_noise > headroom * batch
+    growth: float = 1.5       # multiplicative batch growth per trigger
+    # --- pre-spike precursor ------------------------------------------
+    precursor_window: int = 12   # sketch ring length (0 disables sketches)
+    precursor_dim: int = 16      # random-projection sketch dimension
+    precursor_lags: int = 3      # autocorrelation lags averaged per leaf
+    precursor_gate: float = 0.8  # absolute per-leaf correlation gate
+                                 # (ambient plateau correlation measures
+                                 # ~0.75 peak on the bench corpus; real
+                                 # excursions reach 0.9+)
+    precursor_rise: float = 0.25  # ... and score - trailing > rise.
+                                  # Additive on purpose: scores are
+                                  # bounded cosines, so a multiplicative
+                                  # baseline gate would be unreachable
+                                  # for naturally-correlated leaves
+    precursor_grace: int = 6     # score observations before firing is legal
+    precursor_cooldown_steps: int = 8   # LR cool-down window on an event
+    precursor_cooldown_factor: float = 0.5  # LR multiplier during cool-down
+    sketch_seed: int = 17        # fixed PRNG seed for the per-leaf signs
 
 
 @dataclass(frozen=True)
@@ -259,6 +311,9 @@ class TrainConfig:
     # *joint* recipe (SLW + 8x batch + 4x/40x LR warmup) is just "enable
     # both".  A non-empty tuple overrides the derivation entirely.
     regulators: Tuple[RegulatorSpec, ...] = ()
+    # gradient-noise-scale measurement + pre-spike forecasting (repro.gns);
+    # disabled by default — the train step's trace is untouched unless on
+    gns: GNSConfig = field(default_factory=GNSConfig)
     seq_len: int = 1024
     global_batch: int = 512
     seed: int = 1234

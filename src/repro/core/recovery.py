@@ -360,9 +360,27 @@ class RecoveryRegulator(Regulator):
         self.lr_scale = 1.0
         self.seq_drop = 0       # bucket-ladder rungs to clamp down
         self.data_offset = 0    # extra batches skipped in the data stream
+        # per-leaf LR backoff: label -> multiplicative scale, applied by
+        # the chain as hyper["leaf_lr_scale"] so rung 1 can act on the
+        # *blamed* layer group before touching the global multiplier
+        self.leaf_lr_scales: Dict[str, float] = {}
+        # precursor-driven pre-emptive cooldown: a temporary global LR
+        # scale with a step TTL (the early warning fired before any
+        # divergence — cool the whole run briefly instead of escalating)
+        self.cool_scale = 1.0
+        self.cool_ttl = 0
 
     # -- escalation ladder ---------------------------------------------------
-    def deepen_lr(self) -> None:
+    def deepen_lr(self, blamed: str = "") -> None:
+        """Deepen the LR backoff.  With a ``blamed`` leaf label, the
+        backoff lands on that leaf alone (per-leaf scale through the
+        chain's runtime ``leaf_lr_scale`` vector); without one — or on
+        repeat rollbacks — it falls back to the global multiplier."""
+        if blamed:
+            cur = self.leaf_lr_scales.get(blamed, 1.0)
+            self.leaf_lr_scales[blamed] = max(
+                cur * self.cfg.lr_backoff, self.cfg.lr_floor)
+            return
         self.lr_scale = max(self.lr_scale * self.cfg.lr_backoff,
                             self.cfg.lr_floor)
 
@@ -372,10 +390,29 @@ class RecoveryRegulator(Regulator):
     def skip_data(self) -> None:
         self.data_offset += self.cfg.skip_window_steps
 
+    # -- precursor cooldown --------------------------------------------------
+    def precursor_cooldown(self, factor: float, steps: int) -> None:
+        """Apply a temporary LR cool-down (most-severe merge: the scale
+        only tightens, the TTL only extends)."""
+        self.cool_scale = max(min(self.cool_scale, factor),
+                              self.cfg.lr_floor)
+        self.cool_ttl = max(self.cool_ttl, int(steps))
+
+    def leaf_lr_vector(self, labels: Tuple[str, ...]):
+        """(n_leaves,) f32 scale vector in label order, or None when no
+        per-leaf backoff is active (so the default trace stays intact)."""
+        if not self.leaf_lr_scales:
+            return None
+        return np.asarray([self.leaf_lr_scales.get(lbl, 1.0)
+                           for lbl in labels], np.float32)
+
     # -- regulator protocol --------------------------------------------------
     def plan(self, tele: StepTelemetry, plan: StepPlan) -> StepPlan:
-        plan.lr *= self.lr_scale
-        plan.grad_clip_scale *= self.lr_scale
+        scale = self.lr_scale
+        if self.cool_ttl > 0:
+            scale *= self.cool_scale
+        plan.lr *= scale
+        plan.grad_clip_scale *= scale
         if self.seq_drop:
             rung = 0
             for i, s in enumerate(self.ladder):
@@ -385,14 +422,27 @@ class RecoveryRegulator(Regulator):
                                self.ladder[max(rung - self.seq_drop, 0)])
         return plan
 
+    def observe(self, tele: StepTelemetry, tokens_step: int) -> None:
+        if self.cool_ttl > 0:
+            self.cool_ttl -= 1
+            if self.cool_ttl == 0:
+                self.cool_scale = 1.0
+
     def state_dict(self) -> Dict[str, Any]:
         return {"lr_scale": self.lr_scale, "seq_drop": self.seq_drop,
-                "data_offset": self.data_offset}
+                "data_offset": self.data_offset,
+                "leaf_lr_scales": dict(self.leaf_lr_scales),
+                "cool_scale": self.cool_scale, "cool_ttl": self.cool_ttl}
 
     def load_state_dict(self, d: Dict[str, Any]) -> None:
         self.lr_scale = float(d["lr_scale"])
         self.seq_drop = int(d["seq_drop"])
         self.data_offset = int(d["data_offset"])
+        # keys absent in pre-PR-9 checkpoints: default to inactive
+        self.leaf_lr_scales = {str(k): float(v) for k, v in
+                               dict(d.get("leaf_lr_scales", {})).items()}
+        self.cool_scale = float(d.get("cool_scale", 1.0))
+        self.cool_ttl = int(d.get("cool_ttl", 0))
 
 
 class RollbackController:
@@ -474,19 +524,45 @@ class RollbackController:
             self.events.append(f"restored@{snap.step}")
 
         post = reg.state_dict()
+        pre_leaf = dict(pre.get("leaf_lr_scales", {}))
+        post_leaf = dict(post.get("leaf_lr_scales", {}))
         reg.load_state_dict({
             "lr_scale": min(pre["lr_scale"], post["lr_scale"]),
             "seq_drop": max(pre["seq_drop"], post["seq_drop"]),
             "data_offset": max(pre["data_offset"], post["data_offset"]),
+            "leaf_lr_scales": {
+                lbl: min(pre_leaf.get(lbl, 1.0), post_leaf.get(lbl, 1.0))
+                for lbl in set(pre_leaf) | set(post_leaf)},
+            "cool_scale": min(pre.get("cool_scale", 1.0),
+                              post.get("cool_scale", 1.0)),
+            "cool_ttl": max(pre.get("cool_ttl", 0),
+                            post.get("cool_ttl", 0)),
         })
         self._intervene(trainer)
         self.detector.begin_cooldown()
         return True
 
+    # -- precursor (early warning, before any divergence event) --------------
+    def handle_precursor(self, trainer, event, factor: float = 0.5,
+                         ttl: int = 8) -> None:
+        """Proactive reaction to a gradient-direction precursor: push a
+        known-good snapshot *now* (the state is still healthy — the whole
+        point of firing early) and apply a temporary LR cool-down instead
+        of burning a rollback rung.  Costs nothing from the retry budget."""
+        self.events.append(str(event))
+        self.snapshot(trainer)
+        if "recovery" in trainer.stack:
+            trainer.stack["recovery"].precursor_cooldown(factor, ttl)
+
     def _intervene(self, trainer) -> None:
         reg: RecoveryRegulator = trainer.stack["recovery"]
-        # rung 1 (every rollback): deepen the LR/grad-clip backoff
-        reg.deepen_lr()
+        # rung 1 (every rollback): deepen the LR/grad-clip backoff — on
+        # the *first* rollback with a blamed leaf, the backoff is scoped
+        # to that leaf alone (per-leaf scale through the chain); repeat
+        # rollbacks mean the scoped containment was not enough, so they
+        # fall through to the global multiplier
+        blamed = self.detector.blamed
+        reg.deepen_lr(blamed if (blamed and self.rollbacks == 1) else "")
         if "var_lr_throttle" in trainer.stack:
             th = trainer.stack["var_lr_throttle"]
             th.scale = max(th.scale * th.spec.backoff, th.spec.floor)

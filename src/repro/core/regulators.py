@@ -71,9 +71,23 @@ class StepTelemetry:
     tokens_seen: int = 0
     loss: float = float("nan")
     loss_ratio: float = float("nan")
+    # grad_norm is the RAW pre-clip global norm (measured before the clip
+    # scales anything) — the variance signal regulators act on.
+    # grad_norm_clipped is the post-clip norm, reported separately so the
+    # two can never be conflated again: under sustained clipping it
+    # saturates at the clip limit and carries no noise information.
     grad_norm: float = float("nan")
+    grad_norm_clipped: float = float("nan")
     var_max: float = float("nan")
     var_l1: float = float("nan")
+    # gradient-noise-scale pair (NaN unless TrainConfig.gns is enabled and
+    # the step realized >= 2 emulated shards): mean per-shard / full-batch
+    # squared gradient norms and the shard/batch sizes they were measured
+    # at — everything GNSEstimator needs for the unbiased B_noise estimate
+    gns_small_sq: float = float("nan")
+    gns_big_sq: float = float("nan")
+    gns_b_small: float = float("nan")
+    gns_b_big: float = float("nan")
     per_leaf: Optional[Dict[str, np.ndarray]] = None
     leaf_labels: Tuple[str, ...] = ()
 
@@ -202,11 +216,22 @@ class LRScheduleRegulator(Regulator):
 class GradNoiseBatchRegulator(Regulator):
     """Adaptive batch sizing from gradient-norm noise (beyond-paper).
 
-    Tracks EMA mean/second-moment of the clipped-gradient norm; while the
-    relative std exceeds ``noise_target`` (gradient estimates are noisy, so
-    more averaging pays for itself — the critical-batch-size argument),
-    grows the batch multiplicatively.  Monotone non-decreasing, quantized
-    to the data-parallel size, capped at the full batch.
+    Tracks EMA mean/second-moment of the **raw pre-clip** gradient norm;
+    while the relative std exceeds ``noise_target`` (gradient estimates are
+    noisy, so more averaging pays for itself — the critical-batch-size
+    argument), grows the batch multiplicatively.  Monotone non-decreasing,
+    quantized to the data-parallel size, capped at the full batch.
+
+    The pre-clip contract matters: a *post*-clip norm saturates at the clip
+    limit whenever training clips persistently, so its relative std reads
+    ~0 and the regulator never grows — the global clip would erase exactly
+    the noise signal being regulated on.  ``StepTelemetry.grad_norm`` is
+    that raw norm (``clip_global_norm`` measures before scaling and reports
+    the post-clip value separately as ``grad_norm_clipped``); the
+    regression test pinning this is in ``tests/test_regulators.py``.
+
+    Superseded by the measured-noise-scale ``critical_batch`` kind
+    (``repro.gns.regulator``) when ``TrainConfig.gns`` is enabled.
     """
 
     name = "grad_noise_batch"
@@ -228,7 +253,7 @@ class GradNoiseBatchRegulator(Regulator):
         return plan
 
     def observe(self, tele: StepTelemetry, tokens_step: int) -> None:
-        g = tele.grad_norm
+        g = tele.grad_norm  # raw pre-clip norm — see the class docstring
         if not math.isfinite(g):
             return
         if self.n_obs == 0:
@@ -464,6 +489,11 @@ def build_stack(tc: TrainConfig, *, dp_size: int = 1,
                                                 dp_size=dp_size))
         elif spec.kind == "var_lr_throttle":
             regs.append(VarianceLRThrottle(spec))
+        elif spec.kind == "critical_batch":
+            # deferred import: repro.gns depends on this module's protocol
+            from repro.gns.regulator import CriticalBatchRegulator
+            regs.append(CriticalBatchRegulator(tc.gns, tc.global_batch,
+                                               dp_size=dp_size))
         else:
             raise ValueError(f"unknown regulator kind {spec.kind!r}")
     return RegulatorStack(regs, full_seq=tc.seq_len,

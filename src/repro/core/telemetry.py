@@ -35,10 +35,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-# keys of the per-leaf vectors the optimizer chain may emit in its metrics
-# dict (each value is a (n_leaves,) f32 vector in param_labels order)
+# keys of the per-leaf vectors the jitted step may emit in its metrics
+# dict (each value is (n_leaves,) f32 in param_labels order, except
+# leaf_gns_sketch: (n_leaves, d) — the random-projection direction sketch
+# the pre-spike precursor rings up host-side)
 PER_LEAF_KEYS = ("leaf_var_max", "leaf_grad_norm", "leaf_update_norm",
-                 "leaf_param_norm")
+                 "leaf_param_norm", "leaf_gns_small_sq", "leaf_gns_big_sq",
+                 "leaf_gns_sketch")
 
 
 def _path_str(p) -> str:
@@ -109,6 +112,34 @@ def per_leaf_from_host(d: Optional[Dict[str, Any]]
     if d is None:
         return None
     return {k: np.asarray(v, np.float32) for k, v in d.items()}
+
+
+def read_metrics_jsonl(path: str
+                       ) -> Tuple[Tuple[str, ...], List[Dict[str, Any]]]:
+    """Parse a ``--metrics-jsonl`` stream back into Python.
+
+    Returns ``(leaf_labels, rows)``: the labels from the one-time header
+    row (empty tuple when the run never emitted per-leaf vectors) and the
+    row dicts in step order, with each row's ``per_leaf`` dict converted
+    back to ``np.float32`` arrays via :func:`per_leaf_from_host`.  The
+    round-trip inverse of ``MetricsJsonlHook``; reused by ``bench_gns``
+    to pull measured series out of a run.
+    """
+    import json
+    labels: Tuple[str, ...] = ()
+    rows: List[Dict[str, Any]] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            row = json.loads(line)
+            if "leaf_labels" in row:
+                labels = tuple(row["leaf_labels"])
+            if row.get("per_leaf") is not None:
+                row["per_leaf"] = per_leaf_from_host(row["per_leaf"])
+            rows.append(row)
+    return labels, rows
 
 
 def blame(labels: Tuple[str, ...], ratios: np.ndarray) -> str:

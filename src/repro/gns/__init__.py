@@ -1,0 +1,26 @@
+"""Gradient-noise-scale subsystem: measured critical batch size +
+pre-spike forecasting on the per-leaf telemetry.
+
+Three layers (see the module docstrings):
+
+* :mod:`repro.gns.estimator` — the unbiased ``B_noise = tr(Sigma)/|G|^2``
+  estimate from the per-shard/full-batch gradient-norm pair the jitted
+  train step emits, EMA-smoothed, with the derived critical-batch-size /
+  efficiency curve (McCandlish et al.).
+* :mod:`repro.gns.precursor` — bounded-memory random-sign sketches of
+  per-leaf gradient directions in a short ring, time-lagged
+  autocorrelation as an early-warning event before the divergence
+  detector's var/norm excursion (Molybog et al.).
+* :mod:`repro.gns.regulator` — ``CriticalBatchRegulator``: batch warmup
+  driven by the measured noise scale instead of the grad-norm-EMA proxy.
+"""
+from repro.gns.estimator import GNSEstimator, gns_estimates
+from repro.gns.precursor import GradientPrecursor, PrecursorEvent, \
+    PrecursorHook
+from repro.gns.regulator import CriticalBatchRegulator
+
+__all__ = [
+    "GNSEstimator", "gns_estimates",
+    "GradientPrecursor", "PrecursorEvent", "PrecursorHook",
+    "CriticalBatchRegulator",
+]

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, OptimizerConfig
+from repro.configs.base import GNSConfig, ModelConfig, OptimizerConfig
 from repro.distributed.sharding import ShardingRules, use_rules
 from repro.models import model_zoo
 from repro.optim import transforms as optim_tx
@@ -22,37 +22,132 @@ from repro.optim import transforms as optim_tx
 # step functions
 # ---------------------------------------------------------------------------
 
+def _gns_shard_count(gns: GNSConfig, batch_rows: int) -> int:
+    """Realized emulated-replica count: the largest divisor of the step's
+    batch that is <= the configured shard count (1 = GNS pair unavailable
+    for this batch shape — e.g. a batch of one row)."""
+    for k in range(min(gns.shards, batch_rows), 1, -1):
+        if batch_rows % k == 0:
+            return k
+    return 1
+
+
 def make_train_step(model, opt_cfg: OptimizerConfig,
                     rules: Optional[ShardingRules] = None,
-                    optimizer: Optional[optim_tx.GradientTransform] = None):
+                    optimizer: Optional[optim_tx.GradientTransform] = None,
+                    gns: Optional[GNSConfig] = None):
     # `clip_scale` is a runtime scalar so regulators (e.g. the variance LR
     # throttle) can tighten the clip per step without recompiling; callers
     # that never pass it get the config constant.  `grad_scale`, when not
     # None, is a (n_leaves,) runtime vector multiplied onto the raw
     # per-leaf gradients pre-clip — the fault injector's hook for targeting
-    # one block's gradients (and a future per-leaf runtime control surface).
+    # one block's gradients.  `leaf_lr`, when not None, is a (n_leaves,)
+    # runtime vector carried to the chain as hyper["leaf_lr_scale"] — the
+    # recovery controller's per-layer LR backoff surface.  Both default to
+    # None so the common trace is byte-identical to the legacy step.
+    #
+    # `gns` (when enabled) adds the gradient-noise-scale measurement: the
+    # batch is viewed as k emulated data-parallel shards and the per-shard
+    # gradients are computed with a vmapped value_and_grad — the full-batch
+    # gradient is their (token-weighted) mean, exactly what a psum over
+    # real dp replicas would produce, so the small/big squared-norm pair
+    # the estimator needs comes from what each shard already holds.  The
+    # disabled path does not touch the trace at all.
     tx = optimizer if optimizer is not None else \
         optim_tx.build_optimizer(opt_cfg)
+    gns_cfg = gns if (gns is not None and gns.enabled) else None
+    if gns_cfg is not None and gns_cfg.precursor_window > 0:
+        sketch_key = jax.random.PRNGKey(gns_cfg.sketch_seed)
+        sketch_dim = max(gns_cfg.precursor_dim, 1)
 
-    def train_step(state, batch, lr, clip_scale=1.0, grad_scale=None):
+        def _sketch(i, g):
+            """(d,) random-sign bucket sketch of one leaf's gradient: an
+            unbiased inner-product sketch (E[<s_t,s_u>] = <g_t,g_u>) with
+            fixed per-leaf signs, O(n) compute / O(d) output."""
+            flat = g.astype(jnp.float32).reshape(-1)
+            m = -(-flat.shape[0] // sketch_dim)  # ceil(n / d)
+            flat = jnp.pad(flat, (0, m * sketch_dim - flat.shape[0]))
+            signs = jax.random.rademacher(
+                jax.random.fold_in(sketch_key, i),
+                (m * sketch_dim,), jnp.float32)
+            return jnp.sum((flat * signs).reshape(sketch_dim, m), axis=1)
+
+    def _scaled_leaves(tree, grad_scale):
+        leaves, td = jax.tree_util.tree_flatten(tree)
+        if grad_scale is not None:
+            leaves = [g * grad_scale[i].astype(g.dtype)
+                      for i, g in enumerate(leaves)]
+        return leaves, td
+
+    def train_step(state, batch, lr, clip_scale=1.0, grad_scale=None,
+                   leaf_lr=None):
         with use_rules(rules):
-            def loss_fn(p):
-                return model.loss(p, batch)
+            def loss_fn(p, b):
+                return model.loss(p, b)
 
-            (loss, metrics), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(state["params"])
-            if grad_scale is not None:
-                leaves, td = jax.tree_util.tree_flatten(grads)
-                leaves = [g * grad_scale[i].astype(g.dtype)
-                          for i, g in enumerate(leaves)]
-                grads = jax.tree_util.tree_unflatten(td, leaves)
+            gns_tel = {}
+            rows = jax.tree_util.tree_leaves(batch)[0].shape[0]
+            k = _gns_shard_count(gns_cfg, rows) if gns_cfg is not None else 1
+            if k >= 2:
+                # k emulated dp shards: contiguous row groups, per-shard
+                # value_and_grad under vmap; the full-batch gradient is
+                # the token-weighted shard mean (loss is a token-mean, so
+                # this equals the single-pass gradient up to fp rounding)
+                sharded = jax.tree_util.tree_map(
+                    lambda v: v.reshape((k, v.shape[0] // k) + v.shape[1:]),
+                    batch)
+                (losses, metrics_k), grads_k = jax.vmap(
+                    lambda b: jax.value_and_grad(loss_fn, has_aux=True)(
+                        state["params"], b))(sharded)
+                tokens_k = metrics_k.get("tokens")
+                w = (tokens_k.astype(jnp.float32)
+                     / jnp.maximum(jnp.sum(tokens_k), 1.0)
+                     if tokens_k is not None
+                     else jnp.full((k,), 1.0 / k, jnp.float32))
+                metrics = {
+                    name: (jnp.sum(v, axis=0) if name == "tokens"
+                           else jnp.tensordot(w, v.astype(jnp.float32),
+                                              axes=1))
+                    for name, v in metrics_k.items()}
+                # per-shard leaves carry the grad_spike fault scale too, so
+                # the measurement sees the same gradients the chain does
+                shard_leaves, td = _scaled_leaves(grads_k, grad_scale)
+                full_leaves = [
+                    jnp.tensordot(w.astype(g.dtype), g, axes=1)
+                    for g in shard_leaves]
+                grads = jax.tree_util.tree_unflatten(td, full_leaves)
+                sq = lambda g: jnp.square(g.astype(jnp.float32))
+                leaf_small = jnp.stack([
+                    jnp.mean(jnp.sum(sq(g),
+                                     axis=tuple(range(1, g.ndim))))
+                    for g in shard_leaves])
+                leaf_big = jnp.stack([jnp.sum(sq(g)) for g in full_leaves])
+                gns_tel = {
+                    "gns_small_sq": jnp.sum(leaf_small),
+                    "gns_big_sq": jnp.sum(leaf_big),
+                    "gns_b_small": jnp.float32(rows // k),
+                    "gns_b_big": jnp.float32(rows),
+                    "leaf_gns_small_sq": leaf_small,
+                    "leaf_gns_big_sq": leaf_big,
+                }
+                if gns_cfg.precursor_window > 0:
+                    gns_tel["leaf_gns_sketch"] = jnp.stack([
+                        _sketch(i, g) for i, g in enumerate(full_leaves)])
+            else:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(state["params"], batch)
+                if grad_scale is not None:
+                    leaves, td = _scaled_leaves(grads, grad_scale)
+                    grads = jax.tree_util.tree_unflatten(td, leaves)
+            hyper = {"lr": lr, "clip_scale": clip_scale}
+            if leaf_lr is not None:
+                hyper["leaf_lr_scale"] = leaf_lr
             updates, new_opt, telemetry = tx.update(
-                grads, state["opt"], state["params"],
-                {"lr": lr, "clip_scale": clip_scale})
+                grads, state["opt"], state["params"], hyper)
             new_params = optim_tx.apply_updates(state["params"], updates)
         new_state = {"params": new_params, "opt": new_opt,
                      "step": state["step"] + 1}
-        out = {**metrics, **telemetry, "lr": lr}
+        out = {**metrics, **telemetry, **gns_tel, "lr": lr}
         return new_state, out
 
     return train_step

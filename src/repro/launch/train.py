@@ -38,7 +38,8 @@ import jax.numpy as jnp
 
 from repro.configs import get_arch, reduced as reduce_cfg
 from repro.configs.base import (
-    BatchWarmupConfig, OptimizerConfig, RegulatorSpec, SLWConfig, TrainConfig)
+    BatchWarmupConfig, GNSConfig, OptimizerConfig, RegulatorSpec, SLWConfig,
+    TrainConfig)
 from repro.core import LossRatioTracker
 from repro.core import telemetry as telemetry_lib
 from repro.core.recovery import (RecoveryConfig, RecoveryHook,
@@ -79,6 +80,8 @@ class TrainResult:
     rollbacks: int = 0
     recovery_events: List[str] = field(default_factory=list)
     faults_fired: List[str] = field(default_factory=list)
+    # gradient-direction early warnings (repro.gns.precursor)
+    precursor_events: List[str] = field(default_factory=list)
 
 
 # ---------------------------------------------------------------------------
@@ -192,6 +195,13 @@ class MetricsJsonlHook(TrainerHook):
                      "lr": plan.lr,
                      "grad_clip_scale": plan.grad_clip_scale},
         }
+        # optional scalar channels: written only when the step emitted
+        # them (finite), so pre-PR-9 row shapes are unchanged
+        for k in ("grad_norm_clipped", "gns_small_sq", "gns_big_sq",
+                  "gns_b_small", "gns_b_big"):
+            v = getattr(tele, k)
+            if math.isfinite(v):
+                row[k] = v
         if tele.per_leaf is not None:
             # per-leaf vectors in leaf_labels order; the labels themselves
             # are written once (first per-leaf row), not per step
@@ -298,7 +308,8 @@ class Trainer:
                      if tc.checkpoint_dir else None)
 
         self.step_fn = jax.jit(steps_lib.make_train_step(self.model,
-                                                         tc.optimizer),
+                                                         tc.optimizer,
+                                                         gns=tc.gns),
                                donate_argnums=(0,))
         self.eval_fn = jax.jit(lambda p, b: self.model.loss(p, b)[1]["loss"])
 
@@ -342,6 +353,15 @@ class Trainer:
             self.hooks.append(RecoveryHook(self.recovery))
         if fault_injector is not None:
             self.hooks.append(FaultInjectionHook(fault_injector))
+        # GNS precursor: direction-sketch early warning, wired into the
+        # rollback controller (proactive snapshot + LR cool-down) when
+        # recovery is on; pure telemetry otherwise
+        if tc.gns.enabled and tc.gns.precursor_window > 0:
+            from repro.gns.precursor import GradientPrecursor, PrecursorHook
+            self.hooks.append(PrecursorHook(
+                GradientPrecursor(tc.gns), controller=self.recovery,
+                cool=(tc.gns.precursor_cooldown_factor,
+                      tc.gns.precursor_cooldown_steps)))
         self.hooks += list(hooks or [])
 
     # -- control signals -----------------------------------------------------
@@ -417,25 +437,35 @@ class Trainer:
             self._pending_grad_fault = None
             grad_scale = self.fault_injector.grad_scale_vector(
                 self.leaf_labels, self.step, factor, substr)
-        if grad_scale is None:
-            self.state, metrics = self.step_fn(
-                self.state, batch, np.float32(plan.lr),
-                np.float32(plan.grad_clip_scale))
-        else:
-            self.state, metrics = self.step_fn(
-                self.state, batch, np.float32(plan.lr),
-                np.float32(plan.grad_clip_scale), grad_scale)
+        # optional runtime vectors: only passed when active, so the common
+        # trace (no fault, no per-leaf backoff) stays byte-identical
+        extra: Dict[str, Any] = {}
+        if grad_scale is not None:
+            extra["grad_scale"] = grad_scale
+        if self._recovery_reg is not None \
+                and self._recovery_reg.leaf_lr_scales:
+            extra["leaf_lr"] = self._recovery_reg.leaf_lr_vector(
+                self.leaf_labels)
+        self.state, metrics = self.step_fn(
+            self.state, batch, np.float32(plan.lr),
+            np.float32(plan.grad_clip_scale), **extra)
         # per-leaf vectors (telemetry_level == "per_leaf") ride StepTelemetry,
         # not the scalar metrics dict the hooks float()
         metrics, per_leaf = telemetry_lib.split_metrics(metrics)
         loss = float(metrics["loss"])
         ratio = (self.tracker.update(loss) if math.isfinite(loss)
                  else float("inf"))
+        nan = float("nan")
         post = dataclasses.replace(
             tele, loss=loss, loss_ratio=ratio,
             grad_norm=float(metrics["grad_norm"]),
+            grad_norm_clipped=float(metrics.get("grad_norm_clipped", nan)),
             var_max=float(metrics["var_max"]),
             var_l1=float(metrics["var_l1"]),
+            gns_small_sq=float(metrics.get("gns_small_sq", nan)),
+            gns_big_sq=float(metrics.get("gns_big_sq", nan)),
+            gns_b_small=float(metrics.get("gns_b_small", nan)),
+            gns_b_big=float(metrics.get("gns_b_big", nan)),
             per_leaf=per_leaf,
             leaf_labels=self.leaf_labels if per_leaf is not None else ())
         self.stack.observe(post, tokens_step)
@@ -554,7 +584,12 @@ def build_config(args) -> TrainConfig:
                            start_batch=max(args.batch // 8, 1),
                            warmup_tokens=(args.tokens or args.steps
                                           * args.batch * args.seq) // 20)
+    gns = GNSConfig(enabled=args.gns or args.gns_batch,
+                    shards=args.gns_shards,
+                    precursor_window=args.gns_precursor_window,
+                    headroom=args.gns_headroom)
     tc = TrainConfig(model=cfg, optimizer=opt, slw=slw, batch_warmup=bw,
+                     gns=gns,
                      seq_len=args.seq, global_batch=args.batch,
                      seed=args.seed, remat=args.remat,
                      eval_interval=args.eval_interval,
@@ -566,6 +601,8 @@ def build_config(args) -> TrainConfig:
     extra = []
     if args.grad_noise_batch:
         extra.append(RegulatorSpec(kind="grad_noise_batch"))
+    if args.gns_batch:
+        extra.append(RegulatorSpec(kind="critical_batch"))
     if args.var_lr_throttle:
         extra.append(RegulatorSpec(kind="var_lr_throttle"))
     if extra:
@@ -619,6 +656,22 @@ def main(argv=None) -> int:
                    help="composes with --slw (the paper's joint recipe)")
     p.add_argument("--grad-noise-batch", action="store_true",
                    help="adaptive batch sizing from grad-norm noise")
+    p.add_argument("--gns", action="store_true",
+                   help="gradient-noise-scale measurement: per-shard grad "
+                        "norms inside the jitted step -> unbiased B_noise "
+                        "estimate + direction-sketch spike precursor "
+                        "(repro.gns)")
+    p.add_argument("--gns-shards", type=int, default=4,
+                   help="emulated data-parallel shards for the GNS pair "
+                        "(largest divisor of the realized batch is used)")
+    p.add_argument("--gns-batch", action="store_true",
+                   help="B_noise-measured batch warmup (critical_batch "
+                        "regulator; implies --gns)")
+    p.add_argument("--gns-precursor-window", type=int, default=12,
+                   help="direction-sketch ring length for the spike "
+                        "precursor (0 disables the precursor)")
+    p.add_argument("--gns-headroom", type=float, default=2.0,
+                   help="grow the batch while B_noise > headroom * batch")
     p.add_argument("--var-lr-throttle", action="store_true",
                    help="LR backoff while Adam variance-max spikes")
     p.add_argument("--dp-size", type=int, default=0,

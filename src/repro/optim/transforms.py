@@ -96,7 +96,14 @@ def clip_global_norm(max_norm: float, per_leaf_telemetry: bool = False
                      ) -> GradientTransform:
     """Cast to fp32, measure the global norm, clip to ``max_norm *
     hyper["clip_scale"]``.  ``max_norm <= 0`` measures without clipping
-    (so ``grad_norm`` telemetry survives an AGC-only configuration)."""
+    (so ``grad_norm`` telemetry survives an AGC-only configuration).
+
+    Telemetry contract: ``grad_norm`` is the RAW pre-clip norm (measured
+    on the incoming gradients, before any scaling) — the noise/variance
+    signal regulators act on.  ``grad_norm_clipped`` is the post-clip
+    norm (``gnorm * scale``); under sustained clipping it saturates at
+    the limit, which is exactly why nothing downstream may regulate on
+    it (see ``GradNoiseBatchRegulator``)."""
 
     def update(updates, state, params, hyper):
         leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
@@ -109,7 +116,8 @@ def clip_global_norm(max_norm: float, per_leaf_telemetry: bool = False
             scale = jnp.float32(1.0)
         out = jax.tree_util.tree_map(
             lambda g: (g.astype(jnp.float32) * scale), updates)
-        tel: Telemetry = {"grad_norm": gnorm}
+        tel: Telemetry = {"grad_norm": gnorm,
+                          "grad_norm_clipped": gnorm * scale}
         if per_leaf_telemetry:
             tel["leaf_grad_norm"] = jnp.sqrt(jnp.stack(leaves))
         return out, state, tel
@@ -311,6 +319,12 @@ def scale_by_shampoo(cfg: OptimizerConfig, per_leaf_telemetry: bool = False
             new_stats.append({"l": l_new, "r": r_new, "pl": pl, "pr": pr})
             outs.append(grafted.reshape(shape))
         out = jax.tree_util.tree_unflatten(treedef, outs)
+        # preconditioner staleness: steps since the last eigh refresh.
+        # The recompute flag keys off the shared Adam count, so every
+        # block refreshes on the same cadence and one scalar covers all
+        # of them (bench_optim surfaces it per arm).
+        tel = dict(tel, shampoo_staleness=((count - 1) % interval)
+                   .astype(jnp.float32))
         return out, {"adam": adam_state, "stats": tuple(new_stats)}, tel
 
     return GradientTransform("shampoo", init, update)
@@ -395,10 +409,23 @@ def per_leaf_update_telemetry() -> GradientTransform:
 
 
 def scale_by_lr() -> GradientTransform:
+    """Final LR scale.  ``hyper["leaf_lr_scale"]`` — optional, a
+    ``(n_leaves,)`` runtime vector in ``tree_leaves`` order — additionally
+    multiplies each leaf's update: the recovery controller's per-layer LR
+    backoff surface.  Key *presence* is a trace-time (Python) check, so
+    callers that never pass it keep the legacy single-scalar trace
+    byte-identical."""
+
     def update(updates, state, params, hyper):
         lr = hyper["lr"]
-        return (jax.tree_util.tree_map(lambda u: lr * u, updates),
-                state, {})
+        scales = hyper.get("leaf_lr_scale")
+        if scales is None:
+            return (jax.tree_util.tree_map(lambda u: lr * u, updates),
+                    state, {})
+        leaves, treedef = jax.tree_util.tree_flatten(updates)
+        out = [lr * scales[i].astype(u.dtype) * u
+               for i, u in enumerate(leaves)]
+        return jax.tree_util.tree_unflatten(treedef, out), state, {}
 
     return GradientTransform("lr", lambda params: {}, update)
 

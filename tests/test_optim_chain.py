@@ -355,3 +355,81 @@ def test_per_leaf_blame_identifies_injected_layer():
     throttle = Grab.tr.stack["var_lr_throttle"]
     assert throttle.blamed.startswith("layers/attn"), throttle.blamed
     assert throttle.scale < 1.0  # and it actually intervened
+
+
+# ---------------------------------------------------------------------------
+# shampoo preconditioner-staleness telemetry
+# ---------------------------------------------------------------------------
+
+def test_shampoo_staleness_telemetry_tracks_refresh_cadence():
+    """`shampoo_staleness` counts steps since the last eigh refresh: a
+    sawtooth 0..interval-1, resetting on every recompute step."""
+    interval = 5
+    cfg = OptimizerConfig(optimizer="shampoo", lr=1e-2, weight_decay=0.0,
+                          grad_clip=0.0, shampoo_interval=interval)
+    p = {"w": jnp.asarray(np.random.RandomState(0).randn(8, 8), jnp.float32)}
+    tx = build_optimizer(cfg)
+    st = tx.init(p)
+    series = []
+    for step in range(2 * interval + 2):
+        g = _grads_like(p, step)
+        p, st, tel = _chain_step(tx, p, g, st, 1e-3)
+        assert "shampoo_staleness" in tel
+        series.append(int(tel["shampoo_staleness"]))
+    assert series == [s % interval for s in range(len(series))]
+    # interval=1 refreshes every step: staleness is identically zero
+    cfg1 = dataclasses.replace(cfg, shampoo_interval=1)
+    tx1 = build_optimizer(cfg1)
+    st1 = tx1.init(p)
+    for step in range(3):
+        p, st1, tel = _chain_step(tx1, p, _grads_like(p, step), st1, 1e-3)
+        assert int(tel["shampoo_staleness"]) == 0
+
+
+def test_adam_chain_has_no_staleness_row():
+    cfg = OptimizerConfig(lr=1e-2, weight_decay=0.0, grad_clip=0.0)
+    p = _toy_params()
+    tx = build_optimizer(cfg)
+    _, _, tel = _chain_step(tx, p, _grads_like(p, 1), tx.init(p), 1e-3)
+    assert "shampoo_staleness" not in tel
+
+
+# ---------------------------------------------------------------------------
+# runtime per-leaf LR scale (the recovery controller's backoff surface)
+# ---------------------------------------------------------------------------
+
+def test_scale_by_lr_runtime_leaf_vector():
+    tx = tx_lib.scale_by_lr()
+    p = _toy_params()
+    u = jax.tree_util.tree_map(jnp.ones_like, p)
+    n_leaves = len(jax.tree_util.tree_leaves(u))
+    # absent key: the legacy single-scalar trace
+    out, _, _ = tx.update(u, tx.init(p), p, {"lr": jnp.float32(2.0)})
+    for leaf in jax.tree_util.tree_leaves(out):
+        np.testing.assert_allclose(np.asarray(leaf), 2.0)
+    # with the vector: each leaf additionally scaled by its entry, in
+    # tree_leaves order
+    scales = jnp.asarray(np.linspace(0.1, 1.0, n_leaves), jnp.float32)
+    out, _, _ = tx.update(u, tx.init(p), p,
+                          {"lr": jnp.float32(2.0), "leaf_lr_scale": scales})
+    for i, leaf in enumerate(jax.tree_util.tree_leaves(out)):
+        np.testing.assert_allclose(np.asarray(leaf), 2.0 * float(scales[i]),
+                                   rtol=1e-6)
+
+
+def test_clip_reports_raw_and_clipped_norms():
+    """Satellite regression: `grad_norm` is the raw pre-clip global norm
+    (what the noise regulators consume), `grad_norm_clipped` the post-clip
+    value — under persistent clipping the clipped norm saturates at the
+    limit while the raw norm still varies."""
+    tx = tx_lib.clip_global_norm(1.0)
+    p = _toy_params()
+    raws, clippeds = [], []
+    for scale in (4.0, 8.0, 16.0):
+        g = jax.tree_util.tree_map(lambda x: scale * jnp.ones_like(x), p)
+        _, _, tel = tx.update(g, {}, p, {"clip_scale": jnp.float32(1.0)})
+        raws.append(float(tel["grad_norm"]))
+        clippeds.append(float(tel["grad_norm_clipped"]))
+    assert raws[0] < raws[1] < raws[2]          # raw norm tracks the input
+    for c in clippeds:
+        assert c == pytest.approx(1.0, rel=1e-5)   # clipped saturates

@@ -240,3 +240,21 @@ def test_legacy_host_state_migrates():
     assert cs.tracker["min_loss"] == 2.5
     # new-format dicts pass through untouched
     assert migrate_host_state(host) is host
+
+
+def test_grad_noise_batch_reads_raw_preclip_norm():
+    """Regression for the pre-clip contract: under persistent clipping the
+    post-clip norm saturates at the limit (relative std ~0), which would
+    permanently starve the growth trigger.  The regulator must consume the
+    raw `grad_norm`, not `grad_norm_clipped`."""
+    spec = RegulatorSpec(kind="grad_noise_batch", min_batch=4,
+                         noise_window=4, noise_target=0.2, growth=2.0)
+    reg = GradNoiseBatchRegulator(spec, full_batch=64, dp_size=4)
+    for i in range(40):
+        # every step clips: the clipped norm is pinned at the limit while
+        # the raw norm is noisy — exactly the signal being regulated on
+        reg.observe(StepTelemetry(step=i,
+                                  grad_norm=1.0 if i % 2 else 8.0,
+                                  grad_norm_clipped=1.0), 0)
+    assert reg.batch > 4, \
+        "regulator starved by the saturated post-clip norm"
