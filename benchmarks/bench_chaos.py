@@ -17,6 +17,14 @@ Scenarios (all seeded; two runs inject the identical fault):
                 -> process-level supervisor restart from the prior step
 * ``bitflip`` — flipped byte in the newest checkpoint payload -> quarantine
                 + fallback restore on restart
+* ``serve_slots`` — serving-side slot-fault matrix: admission-phase and
+                consumer-callback faults injected across a 2-replica
+                router under sustained bounded-queue ``try_submit`` load.
+                Gates: every uid gets a result, faulted uids retire with
+                ``finish_reason="error"``, clean uids match the
+                fault-free oracle tokenwise (faults never leak across
+                slots or replicas), shed counts stay bounded, and both
+                replicas drain to all-slots-free.
 """
 from __future__ import annotations
 
@@ -142,4 +150,121 @@ def run(quick: bool = False) -> List[Row]:
     finally:
         shutil.rmtree(d, ignore_errors=True)
 
+    rows.append(_serve_slots_row(quick))
     return rows
+
+
+def _serve_slots_row(quick: bool) -> Row:
+    """Serving slot-fault matrix under sustained ``try_submit`` load."""
+    from collections import deque
+
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import BENCH_MODEL
+    from repro.models import model_zoo
+    from repro.serve import (InferenceEngine, Request, Router,
+                             SchedulerConfig, make_replicas)
+
+    n = 12 if quick else 24
+    ADMIT_FAULT = 5   # uid % 5 == 0: _first_token raises at admission
+    STREAM_FAULT = 7  # uid % 7 == 3: on_token consumer raises at token 2
+
+    model = model_zoo.build_model(BENCH_MODEL, dtype=jnp.float32,
+                                  remat="none")
+    params = model_zoo.init_params(jax.random.PRNGKey(0), BENCH_MODEL)
+    cfg = SchedulerConfig(n_slots=2, cache_len=48, min_prompt_bucket=8,
+                          round_multiple=16, max_buckets=4, max_pending=2)
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i,
+                    tokens=tuple(int(t) for t in rng.integers(
+                        0, BENCH_MODEL.vocab_size, size=10 + i % 7)),
+                    max_tokens=4 + i % 5)
+            for i in range(n)]
+
+    # fault-free oracle first (the same fleet shape, no injection)
+    oracle = InferenceEngine(
+        model, params,
+        SchedulerConfig(n_slots=2, cache_len=48, min_prompt_bucket=8,
+                        round_multiple=16, max_buckets=4)).run(reqs)
+    by_uid_oracle = {r.uid: r for r in oracle}
+
+    router = Router(make_replicas(model, params, cfg, 2))
+    for rep in router.replicas:
+        orig = rep.core._first_token
+
+        def failing(req, logits, _orig=orig):
+            if req.uid % ADMIT_FAULT == 0:
+                raise RuntimeError("injected admission fault")
+            return _orig(req, logits)
+
+        rep.core._first_token = failing
+
+    counts: dict = {}
+
+    def on_token(uid: int, tok: int) -> None:
+        counts[uid] = counts.get(uid, 0) + 1
+        if uid % STREAM_FAULT == 3 and uid % ADMIT_FAULT != 0 \
+                and counts[uid] == 2:
+            raise RuntimeError("injected consumer fault")
+
+    backlog = deque(reqs)
+    shed_attempts = 0
+    done: dict = {}
+    t0 = time.time()
+    while backlog or router.busy:
+        # sustained load: keep shoving the backlog head at the bounded
+        # queues; a refused submit is an explicit shed, retried next tick
+        while backlog:
+            if router.submit(backlog[0]):
+                backlog.popleft()
+            else:
+                shed_attempts += 1
+                break
+        router.pump(on_token)
+        for res in router.take_finished():
+            done[res.uid] = res
+    wall = time.time() - t0
+    for res in router.take_finished():
+        done[res.uid] = res
+
+    admit_faulted = {r.uid for r in reqs if r.uid % ADMIT_FAULT == 0}
+    stream_faulted = {r.uid for r in reqs
+                      if r.uid % STREAM_FAULT == 3
+                      and r.uid not in admit_faulted}
+    clean = {r.uid for r in reqs} - admit_faulted - stream_faulted
+
+    _gate("chaos/serve_slots", set(done) == {r.uid for r in reqs},
+          f"missing results for {sorted({r.uid for r in reqs} - set(done))}")
+    for uid in admit_faulted | stream_faulted:
+        _gate("chaos/serve_slots", done[uid].finish_reason == "error",
+              f"uid {uid} faulted but finished "
+              f"{done[uid].finish_reason!r}")
+    for uid in admit_faulted:
+        _gate("chaos/serve_slots", done[uid].tokens == [],
+              f"uid {uid} failed admission yet has tokens")
+    for uid in clean:
+        _gate("chaos/serve_slots",
+              done[uid].tokens == by_uid_oracle[uid].tokens,
+              f"uid {uid} clean but diverged from the fault-free oracle "
+              f"(fault leaked across slots/replicas)")
+    # bounded shed: each refused attempt waits one pump tick, so attempts
+    # can never exceed a few per request even under sustained pressure
+    _gate("chaos/serve_slots", shed_attempts <= 4 * n,
+          f"{shed_attempts} shed attempts for {n} requests")
+    slot_errors = sum(rep.stats.slot_errors for rep in router.replicas)
+    _gate("chaos/serve_slots",
+          slot_errors == len(admit_faulted) + len(stream_faulted),
+          f"slot_errors={slot_errors}, want "
+          f"{len(admit_faulted) + len(stream_faulted)}")
+    for rep in router.replicas:
+        _gate("chaos/serve_slots", sorted(rep.scheduler.free) == [0, 1],
+              f"{rep.name} leaked slots: free={rep.scheduler.free}")
+        _gate("chaos/serve_slots", not rep.scheduler.busy,
+              f"{rep.name} still busy after drain")
+    jax.block_until_ready(router.replicas[0].core.cache)
+    return ("chaos/serve_slots", wall / n * 1e6,
+            f"uids={n} admit_faults={len(admit_faulted)} "
+            f"stream_faults={len(stream_faulted)} shed={shed_attempts} "
+            f"slot_errors={slot_errors} clean_parity=exact")

@@ -24,6 +24,15 @@ Rows (``--json`` via benchmarks.run writes BENCH_serve.json):
   serve/paged_memory        oversubscribed pool (pool tokens < dense slot
                             rows): resident KV bytes paged vs dense + the
                             throughput cost of waiting on pages
+  serve/router_2x           Router over 2 replicas (half the slots each):
+                            aggregate decode tok/s + routing split
+                            (gate: exact parity with the single engine)
+  serve/policy_spf          shortest-prompt-first admission, same workload
+                            (parity gate; ordering is the only difference)
+  serve/policy_budget       budget-packing admission at a binding budget
+                            (parity gate)
+  serve/disaggregated       prefill-role -> decode-role pair behind the
+                            router (parity gate + handoff overhead)
 """
 from __future__ import annotations
 
@@ -39,8 +48,8 @@ import dataclasses
 
 from benchmarks.common import BENCH_MODEL, Row
 from repro.models import model_zoo
-from repro.serve import (InferenceEngine, Request, SchedulerConfig,
-                         cache_nbytes)
+from repro.serve import (InferenceEngine, Request, Router, SchedulerConfig,
+                         cache_nbytes, make_replicas)
 
 PROMPT_LEN = 48
 SLOTS = 4
@@ -152,6 +161,56 @@ def run(quick: bool = False) -> List[Row]:
     dense_kv = cache_nbytes(engine.cache)
     paged_kv = cache_nbytes(eng_m.cache)
 
+    # router arm: 2 replicas at half the slots each — same total width;
+    # aggregate throughput + the routing split, parity is the gate
+    sched_r = dataclasses.replace(sched, n_slots=SLOTS // 2)
+    router = Router(make_replicas(model, params, sched_r, 2))
+    router.run(_requests(cfg.vocab_size, 4, seed=1))  # compile warm-up
+    for rep in router.replicas:
+        rep.reset_stats()
+    router.stats.routed.clear()
+    t0 = time.time()
+    res_r = router.run(reqs)
+    rt_wall = time.time() - t0
+    rt_match = all(a.tokens == b.tokens for a, b in zip(res_r, results))
+    rt_decode_s = sum(rep.stats.decode_s for rep in router.replicas)
+    rt_useful = sum(rep.stats.generated_tokens - rep.stats.admitted
+                    for rep in router.replicas)
+    rt_tok_s = rt_useful / max(rt_decode_s, 1e-9)
+
+    # policy arms: admission *order* changes, per-request streams do not
+    pol_rows: List[Row] = []
+    for key, pol, pb in (("serve/policy_spf", "shortest-prompt-first",
+                          SLOTS),
+                         ("serve/policy_budget", "budget-packing", SLOTS)):
+        sched_pol = dataclasses.replace(
+            sched, policy=pol, prefill_batch=pb,
+            # binding budget for the packing arm: two mid-size requests
+            pack_budget=2 * (PROMPT_LEN + max(GEN_CYCLE)))
+        eng_pol = InferenceEngine(model, params, sched_pol)
+        eng_pol.run(_requests(cfg.vocab_size, n_requests, seed=1))
+        eng_pol.reset_stats()
+        res_pol = eng_pol.run(reqs)
+        pol_match = all(a.tokens == b.tokens
+                        for a, b in zip(res_pol, results))
+        spol = eng_pol.stats
+        pol_rows.append((key,
+                         1e6 * spol.decode_s
+                         / max(spol.generated_tokens - spol.admitted, 1),
+                         f"tok_s={spol.decode_tok_s:.0f} "
+                         f"steps={spol.decode_steps} "
+                         f"parity={'exact' if pol_match else 'MISMATCH'}"))
+
+    # disaggregation arm: one prefill-role + decode-role pair
+    pair = Router(make_replicas(model, params, sched, 1, disaggregate=True))
+    pair.run(_requests(cfg.vocab_size, 4, seed=1))  # compile warm-up
+    dec = pair.replicas[0]
+    dec.reset_stats()
+    dec.prefill_replica.reset_stats()
+    res_d = pair.run(reqs)
+    dg_match = all(a.tokens == b.tokens for a, b in zip(res_d, results))
+    sd = dec.stats
+
     speedup = s.decode_tok_s / max(st_tok_s, 1e-9)
     rows: List[Row] = [
         ("serve/engine_prefill", 1e6 * s.prefill_s / max(s.prefill_tokens, 1),
@@ -189,6 +248,16 @@ def run(quick: bool = False) -> List[Row]:
          f"dense_bytes={dense_kv} "
          f"saving={1 - paged_kv / max(dense_kv, 1):.0%} "
          f"parity={'exact' if pm_match else 'MISMATCH'}"),
+        ("serve/router_2x", 1e6 * rt_wall / max(rt_useful, 1),
+         f"tok_s={rt_tok_s:.0f} replicas=2x{SLOTS // 2}slots "
+         f"routed={'/'.join(str(v) for v in router.stats.routed.values())} "
+         f"parity={'exact' if rt_match else 'MISMATCH'}"),
+        *pol_rows,
+        ("serve/disaggregated",
+         1e6 * sd.decode_s / max(sd.generated_tokens - sd.admitted, 1),
+         f"tok_s={sd.decode_tok_s:.0f} "
+         f"prefill_tok_s={dec.prefill_replica.stats.prefill_tok_s:.0f} "
+         f"parity={'exact' if dg_match else 'MISMATCH'}"),
     ]
     return rows
 

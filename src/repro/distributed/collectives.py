@@ -88,3 +88,32 @@ def reference_decode(q, k_cache, v_cache, pos):
     lengths = jnp.broadcast_to(jnp.asarray(pos), (b,)).astype(jnp.int32)
     out = decode_attention_reference(q[:, 0], k_cache, v_cache, lengths)
     return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def migrate_row(src_state, src_cache, src_slot, dst_state, dst_cache,
+                dst_slot, cache_len=None, placement=None):
+    """Move one slot's cache row between two DecodeStates (slot migration).
+
+    The row travels in *model format* — ``gather`` on the source, optional
+    seq-capacity ``fit_row`` + cross-host/mesh ``device_put``, ``insert``
+    on the destination, ``evict`` on the source — so it works across dense
+    and paged states in either direction (a paged gather returns
+    ``pages_per_slot * page_size`` seq entries; ``fit_row`` trims/pads to
+    the destination geometry, lossless because everything past ``pos`` is
+    garbage the target never reads).  This is the single-host half of the
+    disaggregated-serving story: the prefill→decode handoff and the
+    router's replica rebalancing both ride this path, and the ``placement``
+    hook is where a multi-host destination mesh plugs in.
+
+    Returns the updated ``(src_cache, dst_cache)``; host bookkeeping
+    (scheduler slot state, page reservations) is the caller's job —
+    see ``Replica.migrate_slot_to``.
+    """
+    row = src_state.gather(src_cache, src_slot)
+    if cache_len is not None:
+        row = dst_state.fit_row(row, cache_len)
+    if placement is not None:
+        row = jax.device_put(row, placement)
+    dst_cache = dst_state.insert(dst_cache, dst_slot, row)
+    src_cache = src_state.evict(src_cache, src_slot)
+    return src_cache, dst_cache

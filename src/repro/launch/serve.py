@@ -9,10 +9,18 @@ width (engine slot count / legacy static batch).  The engine path admits
 ``--requests`` ragged requests through the prompt bucket ladder and
 backfills slots as generations finish; the legacy path is kept verbatim as
 the parity oracle (tests) and the static-batch baseline (bench_serve).
+
+``--replicas N`` (or ``--disaggregate``) serves through the Router over N
+replicas — each with ``--batch`` slots — under ``--policy`` admission;
+``--disaggregate`` splits every serving unit into a prefill-role +
+decode-role replica pair.  ``--metrics-jsonl PATH`` streams one JSONL row
+per fused decode step (per replica) plus a final summary row, readable
+back with ``core.telemetry.read_metrics_jsonl``.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
@@ -23,8 +31,24 @@ import jax.numpy as jnp
 from repro.configs import get_arch, reduced as reduce_cfg
 from repro.data import SyntheticCorpus
 from repro.models import model_zoo
-from repro.serve import (InferenceEngine, Request, SamplingParams,
-                         SchedulerConfig)
+from repro.serve import (InferenceEngine, Request, Router, SamplingParams,
+                         SchedulerConfig, make_replicas)
+from repro.serve.policies import POLICIES
+from repro.serve.router import ROUTES
+
+
+class _JsonlWriter:
+    """Append-one-row-per-call JSONL sink for Replica.on_step_metrics."""
+
+    def __init__(self, path: str):
+        self._f = open(path, "w")
+
+    def __call__(self, row: dict) -> None:
+        self._f.write(json.dumps(row) + "\n")
+
+    def close(self) -> None:
+        self._f.flush()
+        self._f.close()
 
 
 def serve(arch: str, use_reduced: bool, batch: int, prompt_len: int,
@@ -102,6 +126,7 @@ def serve_engine(arch: str, use_reduced: bool, n_slots: int, prompt_len: int,
                  sched: SchedulerConfig = None, prefill_batch: int = 1,
                  decode_backend: str = "", paged: bool = False,
                  page_size: int = 64, n_pages: int = 0,
+                 policy: str = "fcfs", metrics_jsonl: str = "",
                  quiet: bool = False):
     """Continuous-batching serve: the thin driver over InferenceEngine."""
     spec = get_arch(arch)
@@ -113,16 +138,25 @@ def serve_engine(arch: str, use_reduced: bool, n_slots: int, prompt_len: int,
         min_prompt_bucket=min(16, max(prompt_len // 4, 1)),
         round_multiple=max(prompt_len // 4, 8),
         prefill_batch=prefill_batch, paged=paged,
-        page_size=page_size, n_pages=n_pages)
+        page_size=page_size, n_pages=n_pages, policy=policy)
     engine = InferenceEngine.from_arch(arch, use_reduced=use_reduced,
                                        seed=seed, cfg=sched,
                                        decode_backend=decode_backend or None)
+    writer = _JsonlWriter(metrics_jsonl) if metrics_jsonl else None
+    if writer is not None:
+        engine.on_step_metrics = writer
     reqs = make_requests(cfg, n_requests, prompt_len, gen_tokens, seed=seed,
                          ragged=ragged, sampling=sampling)
     t0 = time.time()
     results = engine.run(reqs)
     wall = time.time() - t0
     s = engine.stats
+    if writer is not None:
+        writer({"summary": True, "wall_s": wall,
+                "generated_tokens": s.generated_tokens,
+                "decode_steps": s.decode_steps,
+                "slot_errors": s.slot_errors, "shed": s.shed})
+        writer.close()
     if not quiet:
         print(f"arch={cfg.name} slots={n_slots} requests={n_requests} "
               f"buckets={engine.scheduler.ladder}")
@@ -145,6 +179,64 @@ def serve_engine(arch: str, use_reduced: bool, n_slots: int, prompt_len: int,
             "p50_s": s.latency_percentile(50),
             "p95_s": s.latency_percentile(95),
             "results": results, "stats": s}
+
+
+def serve_router(arch: str, use_reduced: bool, n_slots: int, prompt_len: int,
+                 gen_tokens: int, n_requests: int = 0, cache_len: int = 0,
+                 seed: int = 0, ragged: bool = True,
+                 sampling: SamplingParams = SamplingParams(),
+                 replicas: int = 2, policy: str = "fcfs",
+                 route: str = "least-loaded", disaggregate: bool = False,
+                 prefill_batch: int = 1, paged: bool = False,
+                 page_size: int = 64, n_pages: int = 0,
+                 metrics_jsonl: str = "", quiet: bool = False):
+    """Routed serve: N replicas (each ``n_slots`` wide) behind the Router."""
+    spec = get_arch(arch)
+    cfg = reduce_cfg(spec.model) if use_reduced else spec.model
+    n_requests = n_requests or replicas * n_slots
+    cache_len = cache_len or prompt_len + gen_tokens
+    sched = SchedulerConfig(
+        n_slots=n_slots, cache_len=cache_len,
+        min_prompt_bucket=min(16, max(prompt_len // 4, 1)),
+        round_multiple=max(prompt_len // 4, 8),
+        prefill_batch=prefill_batch, paged=paged,
+        page_size=page_size, n_pages=n_pages, policy=policy)
+    model = model_zoo.build_model(cfg, dtype=jnp.float32, remat="none")
+    params = model_zoo.init_params(jax.random.PRNGKey(seed), cfg)
+    router = Router(make_replicas(model, params, sched, replicas,
+                                  disaggregate=disaggregate), route=route)
+    writer = _JsonlWriter(metrics_jsonl) if metrics_jsonl else None
+    if writer is not None:
+        for rep in router.replicas:
+            rep.on_step_metrics = writer
+    reqs = make_requests(cfg, n_requests, prompt_len, gen_tokens, seed=seed,
+                         ragged=ragged, sampling=sampling)
+    t0 = time.time()
+    results = router.run(reqs)
+    wall = time.time() - t0
+    summary = router.summary()
+    if writer is not None:
+        writer(dict(summary, summary=True, wall_s=wall))
+        writer.close()
+    if not quiet:
+        agg = summary["aggregate"]
+        print(f"arch={cfg.name} replicas={replicas} slots={n_slots}/replica "
+              f"policy={policy} route={route} "
+              f"disaggregate={disaggregate} requests={n_requests}")
+        print(f"routed={summary['routed']} spilled={summary['spilled']} "
+              f"shed={summary['shed']}")
+        print(f"prefill: {agg['prefill_s']*1e3:.1f} ms   "
+              f"decode: {agg['decode_s']*1e3:.1f} ms, "
+              f"{agg['generated_tokens']} tokens, "
+              f"{agg['decode_steps']} fused steps, "
+              f"slot_errors={agg['slot_errors']}")
+        for name, row in summary["replicas"].items():
+            print(f"  {name}: admitted={row['admitted']} "
+                  f"{row['decode_tok_s']:.0f} tok/s "
+                  f"p95={row['p95_step_s']*1e3:.1f} ms")
+        print("sample:", results[0].tokens[:16])
+    return {"wall_s": wall, "results": results, "summary": summary,
+            "router": router}
 
 
 def main(argv=None) -> int:
@@ -182,21 +274,45 @@ def main(argv=None) -> int:
     p.add_argument("--temperature", type=float, default=0.0)
     p.add_argument("--top-k", type=int, default=0)
     p.add_argument("--top-p", type=float, default=1.0)
+    p.add_argument("--replicas", type=int, default=1,
+                   help="serve through the Router over N replicas "
+                        "(each --batch slots wide)")
+    p.add_argument("--policy", default="fcfs", choices=list(POLICIES),
+                   help="admission policy (serve/policies.py)")
+    p.add_argument("--route", default="least-loaded", choices=list(ROUTES),
+                   help="router replica selection")
+    p.add_argument("--disaggregate", action="store_true",
+                   help="split each serving unit into a prefill-role + "
+                        "decode-role replica pair")
+    p.add_argument("--metrics-jsonl", default="",
+                   help="stream one JSONL metrics row per fused decode "
+                        "step (+ a summary row) to this path")
     args = p.parse_args(argv)
 
+    sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                        top_p=args.top_p, seed=args.seed)
     if args.legacy:
         serve(args.arch, args.reduced, args.batch, args.prompt_len, args.gen,
               cache_len=args.cache_len, seed=args.seed)
+    elif args.replicas > 1 or args.disaggregate:
+        serve_router(args.arch, args.reduced, args.batch, args.prompt_len,
+                     args.gen, n_requests=args.requests,
+                     cache_len=args.cache_len, seed=args.seed,
+                     ragged=not args.uniform, sampling=sp,
+                     replicas=args.replicas, policy=args.policy,
+                     route=args.route, disaggregate=args.disaggregate,
+                     prefill_batch=args.prefill_batch, paged=args.paged,
+                     page_size=args.page_size, n_pages=args.n_pages,
+                     metrics_jsonl=args.metrics_jsonl)
     else:
-        sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
-                           top_p=args.top_p, seed=args.seed)
         serve_engine(args.arch, args.reduced, args.batch, args.prompt_len,
                      args.gen, n_requests=args.requests,
                      cache_len=args.cache_len, seed=args.seed,
                      ragged=not args.uniform, sampling=sp,
                      prefill_batch=args.prefill_batch,
                      decode_backend=args.decode_backend, paged=args.paged,
-                     page_size=args.page_size, n_pages=args.n_pages)
+                     page_size=args.page_size, n_pages=args.n_pages,
+                     policy=args.policy, metrics_jsonl=args.metrics_jsonl)
     return 0
 
 

@@ -5,18 +5,35 @@ protocol for every backbone (transformer / MoE / Mamba-2 / RWKV-6 / Zamba-2).
 
     engine = InferenceEngine.from_arch("gpt2-117m", use_reduced=True)
     results = engine.run([Request(uid=0, tokens=(1, 2, 3), max_tokens=16)])
+
+The serving stack is layered (see serve/engine.py): ``EngineCore`` (pure
+device layer) / ``AdmissionPolicy`` (serve/policies.py) / ``Replica``
+(slot lifecycle + containment) / ``Router`` (serve/router.py, N-replica
+front-end).  ``InferenceEngine`` is the single-host composition of the
+first three and the tokenwise-parity oracle for the rest.
 """
-from repro.serve.engine import EngineStats, InferenceEngine
+from repro.serve.engine import (EngineCore, EngineStats, InferenceEngine,
+                                Replica)
 from repro.serve.paging import (PageAllocator, PagedDecodeState,
                                 PageExhausted, cache_nbytes)
+from repro.serve.policies import (POLICIES, AdmissionPolicy,
+                                  BudgetPackingPolicy, FCFSPolicy,
+                                  ShortestPromptFirstPolicy, make_policy)
+from repro.serve.router import Router, RouterStats, make_replicas
 from repro.serve.sampling import sample_tokens
-from repro.serve.scheduler import Scheduler, SchedulerConfig, prefill_split
+from repro.serve.scheduler import (QueueFull, Scheduler, SchedulerConfig,
+                                   prefill_split)
 from repro.serve.state import DecodeState, SlotDecodeState
-from repro.serve.types import GenerationResult, Request, SamplingParams
+from repro.serve.types import (GenerationResult, PrefillOutcome,
+                               ReplicaTelemetry, Request, SamplingParams)
 
 __all__ = [
-    "DecodeState", "EngineStats", "GenerationResult", "InferenceEngine",
-    "PageAllocator", "PagedDecodeState", "PageExhausted", "Request",
-    "SamplingParams", "Scheduler", "SchedulerConfig", "SlotDecodeState",
-    "cache_nbytes", "prefill_split", "sample_tokens",
+    "AdmissionPolicy", "BudgetPackingPolicy", "DecodeState", "EngineCore",
+    "EngineStats", "FCFSPolicy", "GenerationResult", "InferenceEngine",
+    "POLICIES", "PageAllocator", "PagedDecodeState", "PageExhausted",
+    "PrefillOutcome", "QueueFull", "Replica", "ReplicaTelemetry", "Request",
+    "Router", "RouterStats", "SamplingParams", "Scheduler",
+    "SchedulerConfig", "ShortestPromptFirstPolicy", "SlotDecodeState",
+    "cache_nbytes", "make_policy", "make_replicas", "prefill_split",
+    "sample_tokens",
 ]

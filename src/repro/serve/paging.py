@@ -96,6 +96,12 @@ class PageAllocator:
     def pages_in_use(self) -> int:
         return self.n_pages - len(self.free_pages)
 
+    @property
+    def free_page_count(self) -> int:
+        """Unowned pages (router admission telemetry; note reservations
+        are *not* subtracted — ``committed`` is the admission-side truth)."""
+        return len(self.free_pages)
+
     def occupancy(self) -> float:
         return self.pages_in_use / self.n_pages
 

@@ -1,0 +1,193 @@
+"""Pluggable admission policies: who gets the next free slots.
+
+Extracted from ``Scheduler.next_admission`` — which remains the FCFS
+primitive; the ``fcfs`` policy delegates to it verbatim, so the default
+path is bitwise the pre-refactor behavior, including the paged
+strict-FCFS reserve gate.  A policy returns up to ``k`` (slot, request)
+pairs that **share one prefill split** (the engine stacks them into a
+single ``(k, bucket)`` prefill call) and honors the ``reserve``
+page-budget hook.
+
+Contracts every implementation must keep (pinned by the property tests in
+tests/test_router.py):
+
+* work-conserving, no starvation: under sustained load every pending
+  request is eventually admitted (shortest-prompt-first ages skipped
+  requests into forced heads; the other two keep a strict-FCFS head);
+* same-split batches only — the shared ``(k, bucket)`` prefill requires
+  every admitted row to quantize to the head's split;
+* reserve gating: a pair is emitted only after ``reserve(slot, request)``
+  accepted it, and a blocked *head* returns ``[]`` with the queue
+  untouched (the head waits for retiring slots to free pages rather than
+  being jumped).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Protocol, Tuple, \
+    runtime_checkable
+
+from repro.serve.scheduler import Scheduler, SchedulerConfig, prefill_split
+from repro.serve.types import Request
+
+Reserve = Optional[Callable[[int, Request], bool]]
+
+
+@runtime_checkable
+class AdmissionPolicy(Protocol):
+    """Decides which pending requests occupy which free slots."""
+
+    name: str
+
+    def select(self, scheduler: Scheduler, k: int, reserve: Reserve = None
+               ) -> List[Tuple[int, Request]]:
+        """Pop up to ``k`` same-split (slot, request) pairs off
+        ``scheduler.pending``/``scheduler.free``; [] admits nothing."""
+        ...
+
+
+class FCFSPolicy:
+    """Strict first-come-first-served: delegates to
+    ``Scheduler.next_admission`` verbatim (same-split pull-forward, paged
+    head gate and all), so single-replica fcfs is the legacy engine."""
+
+    name = "fcfs"
+
+    def select(self, scheduler: Scheduler, k: int, reserve: Reserve = None
+               ) -> List[Tuple[int, Request]]:
+        return scheduler.next_admission(k, reserve=reserve)
+
+
+class ShortestPromptFirstPolicy:
+    """Admit the shortest pending prompt first.
+
+    Minimizes head-of-line blocking from long prefills (the serving-side
+    face of the paper's sequence-length-heterogeneity cost); same-split
+    pull-forward fills the batch shortest-first.  Skipped requests age:
+    once a request has been passed over ``age_limit`` times it becomes the
+    forced head, so a long prompt cannot starve under a stream of short
+    arrivals.
+    """
+
+    name = "shortest-prompt-first"
+
+    def __init__(self, age_limit: int = 16):
+        if age_limit < 1:
+            raise ValueError(f"need age_limit >= 1, got {age_limit}")
+        self.age_limit = age_limit
+        self._skips: Dict[int, int] = {}
+
+    def select(self, scheduler: Scheduler, k: int, reserve: Reserve = None
+               ) -> List[Tuple[int, Request]]:
+        pend = scheduler.pending
+        if not pend or not scheduler.free:
+            return []
+        head_i = None
+        for i in range(len(pend)):  # oldest over-aged request wins
+            if self._skips.get(pend[i].uid, 0) >= self.age_limit:
+                head_i = i
+                break
+        if head_i is None:
+            head_i = min(range(len(pend)),
+                         key=lambda i: (pend[i].prompt_len, i))
+        head = pend[head_i]
+        if reserve is not None and not reserve(scheduler.free[-1], head):
+            return []  # the chosen head waits; queue untouched
+        del pend[head_i]
+        out = [(scheduler.free.pop(), head)]
+        if k > 1 and pend and scheduler.free:
+            split = prefill_split(head.prompt_len, scheduler.ladder)
+            cands = sorted(
+                (i for i in range(len(pend))
+                 if prefill_split(pend[i].prompt_len,
+                                  scheduler.ladder) == split),
+                key=lambda i: (pend[i].prompt_len, i))
+            taken: List[int] = []
+            for i in cands:
+                if len(out) >= k or not scheduler.free:
+                    break
+                r = pend[i]
+                if reserve is not None and \
+                        not reserve(scheduler.free[-1], r):
+                    continue
+                out.append((scheduler.free.pop(), r))
+                taken.append(i)
+            for i in sorted(taken, reverse=True):
+                del pend[i]
+        for r in pend:
+            self._skips[r.uid] = self._skips.get(r.uid, 0) + 1
+        for _, r in out:
+            self._skips.pop(r.uid, None)
+        return out
+
+
+class BudgetPackingPolicy:
+    """FCFS head + same-split packing under a token budget (Lau et
+    al.-style adaptive batch composition).
+
+    The head always admits in queue order — keeping the strict-FCFS
+    no-starvation guarantee and the paged head gate — then pending
+    requests are pulled forward in queue order while the admission round's
+    total worst-case footprint (``prompt_len + max_tokens`` per request)
+    stays within ``budget``.  One giant batchmate can no longer blow the
+    round's page/step-token footprint: it simply waits for a round whose
+    budget it fits.
+    """
+
+    name = "budget-packing"
+
+    def __init__(self, budget: int):
+        if budget < 1:
+            raise ValueError(f"need budget >= 1, got {budget}")
+        self.budget = budget
+
+    @staticmethod
+    def _need(r: Request) -> int:
+        return r.prompt_len + r.max_tokens
+
+    def select(self, scheduler: Scheduler, k: int, reserve: Reserve = None
+               ) -> List[Tuple[int, Request]]:
+        pend = scheduler.pending
+        if not pend or not scheduler.free:
+            return []
+        if reserve is not None and not reserve(scheduler.free[-1], pend[0]):
+            return []
+        head = pend.popleft()
+        out = [(scheduler.free.pop(), head)]
+        spent = self._need(head)
+        if k > 1:
+            split = prefill_split(head.prompt_len, scheduler.ladder)
+            skipped: List[Request] = []
+            while pend and scheduler.free and len(out) < k:
+                r = pend.popleft()
+                if prefill_split(r.prompt_len, scheduler.ladder) != split \
+                        or spent + self._need(r) > self.budget:
+                    skipped.append(r)
+                    continue
+                if reserve is not None and \
+                        not reserve(scheduler.free[-1], r):
+                    skipped.append(r)
+                    continue
+                out.append((scheduler.free.pop(), r))
+                spent += self._need(r)
+            pend.extendleft(reversed(skipped))
+        return out
+
+
+POLICIES = ("fcfs", "shortest-prompt-first", "budget-packing")
+
+
+def make_policy(cfg: SchedulerConfig) -> AdmissionPolicy:
+    """Instantiate the policy named by ``cfg.policy``.
+
+    One instance per Replica — shortest-prompt-first carries per-queue
+    aging state that must not be shared across replicas.
+    """
+    name = cfg.policy
+    if name == "fcfs":
+        return FCFSPolicy()
+    if name in ("shortest-prompt-first", "spf"):
+        return ShortestPromptFirstPolicy()
+    if name in ("budget-packing", "budget"):
+        return BudgetPackingPolicy(cfg.resolved_pack_budget)
+    raise ValueError(
+        f"unknown admission policy {name!r} (want one of {POLICIES})")

@@ -1,0 +1,220 @@
+"""Router: a request front-end over N serving replicas.
+
+The outermost layer of the disaggregated stack (EngineCore / Replica /
+Router): routes each request to one replica by per-replica admission
+telemetry (queue depth, free slots/pages, trailing p95 step latency),
+spills to the next replica on ``QueueFull``, sheds explicitly when every
+replica is full, and aggregates per-replica :class:`EngineStats` into
+:class:`RouterStats`.
+
+Routing modes: ``"least-loaded"`` (fewest requests in flight, ties break
+on replica order) and ``"round-robin"``.  Tokenwise parity with a single
+engine is structural, not incidental: greedy/seeded streams are
+per-request functions of (params, prompt, sampling) and never of batch
+composition, so any routing decision yields identical tokens —
+tests/test_router.py pins this across policies, paged + dense replicas,
+and disaggregated role splits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.serve.engine import Replica
+from repro.serve.scheduler import QueueFull, SchedulerConfig
+from repro.serve.types import GenerationResult, ReplicaTelemetry, Request
+
+OnToken = Callable[[int, int], None]
+
+ROUTES = ("least-loaded", "round-robin")
+
+
+@dataclass
+class RouterStats:
+    """Front-end accounting: where requests landed and what bounced.
+
+    ``routed[name]`` counts acceptances per replica; ``spilled`` counts
+    requests that bounced off at least one full replica before landing;
+    ``shed`` counts requests every replica refused (the caller's 429).
+    Per-replica engine accounting stays on each replica's ``stats``.
+    """
+
+    routed: Dict[str, int] = field(default_factory=dict)
+    spilled: int = 0
+    shed: int = 0
+
+    @property
+    def total_routed(self) -> int:
+        return sum(self.routed.values())
+
+
+class Router:
+    """Route requests over N replicas; drive them; merge their results."""
+
+    def __init__(self, replicas: Sequence[Replica],
+                 route: str = "least-loaded"):
+        if not replicas:
+            raise ValueError("need at least one replica")
+        if route not in ROUTES:
+            raise ValueError(f"unknown route {route!r} "
+                             f"(want one of {ROUTES})")
+        for rep in replicas:
+            if rep.role == "prefill":
+                raise ValueError(
+                    f"replica {rep.name!r} has role='prefill': route to "
+                    f"serving replicas (role 'both'/'decode'); prefill "
+                    f"workers are reached through their decode partner")
+        self.replicas = list(replicas)
+        self.route = route
+        self._rr = 0
+        self.stats = RouterStats()
+
+    # -- telemetry -----------------------------------------------------------
+    def telemetry(self) -> List[ReplicaTelemetry]:
+        return [rep.telemetry() for rep in self.replicas]
+
+    @property
+    def busy(self) -> bool:
+        return any(rep.scheduler.busy for rep in self.replicas)
+
+    # -- routing -------------------------------------------------------------
+    def _candidates(self) -> List[Replica]:
+        """Replicas in routing-preference order for one request."""
+        if self.route == "round-robin":
+            n = len(self.replicas)
+            order = [self.replicas[(self._rr + i) % n] for i in range(n)]
+            self._rr = (self._rr + 1) % n
+            return order
+        scored = sorted(range(len(self.replicas)),
+                        key=lambda i: (self.replicas[i].telemetry().load, i))
+        return [self.replicas[i] for i in scored]
+
+    def _try_route(self, request: Request, count_shed: bool) -> bool:
+        spilled = False
+        for rep in self._candidates():
+            try:
+                rep.scheduler.submit(request)
+            except QueueFull:
+                spilled = True
+                continue
+            if spilled:
+                self.stats.spilled += 1
+            self.stats.routed[rep.name] = \
+                self.stats.routed.get(rep.name, 0) + 1
+            return True
+        if count_shed:
+            self.stats.shed += 1
+        return False
+
+    def submit(self, request: Request) -> bool:
+        """Route one request; False (counted as shed) when every replica's
+        queue is full.  Invalid requests raise — malformed input is a
+        caller bug, not an overload signal."""
+        return self._try_route(request, count_shed=True)
+
+    # -- driver --------------------------------------------------------------
+    def pump(self, on_token: Optional[OnToken] = None) -> bool:
+        """One admission + decode round on every replica."""
+        progressed = False
+        for rep in self.replicas:
+            progressed = rep.pump(on_token) or progressed
+        return progressed
+
+    def take_finished(self) -> List[GenerationResult]:
+        out: List[GenerationResult] = []
+        for rep in self.replicas:
+            out.extend(rep.take_finished())
+        return out
+
+    def run(self, requests: Sequence[Request],
+            on_token: Optional[OnToken] = None) -> List[GenerationResult]:
+        """Generate for all ``requests`` across the fleet; results come
+        back in request order.  Validation is all-or-nothing and a routable
+        request must be valid on *every* replica (heterogeneous fleets
+        admit only the intersection — the router may send it anywhere).
+        Nothing is shed: a backlog head that no replica can queue right
+        now simply waits for the next pump round.
+        """
+        requests = list(requests)
+        uids = set()
+        for r in requests:
+            if r.uid in uids:
+                raise ValueError(f"request uid {r.uid} duplicated")
+            uids.add(r.uid)
+        for rep in self.replicas:
+            rep.scheduler.validate_batch(requests)
+        backlog = deque(requests)
+        done: Dict[int, GenerationResult] = {}
+        while backlog or self.busy:
+            while backlog and self._try_route(backlog[0], count_shed=False):
+                backlog.popleft()
+            self.pump(on_token)
+            for res in self.take_finished():
+                done[res.uid] = res
+        for res in self.take_finished():
+            done[res.uid] = res
+        return [done[r.uid] for r in requests]
+
+    # -- aggregation ---------------------------------------------------------
+    def summary(self) -> dict:
+        """Aggregated fleet accounting (CLI report / metrics JSONL tail)."""
+        agg = {"generated_tokens": 0, "admitted": 0, "decode_steps": 0,
+               "prefill_s": 0.0, "decode_s": 0.0, "slot_errors": 0,
+               "replica_shed": 0}
+        per = {}
+        for rep in self.replicas:
+            s = rep.stats
+            agg["generated_tokens"] += s.generated_tokens
+            agg["admitted"] += s.admitted
+            agg["decode_steps"] += s.decode_steps
+            agg["prefill_s"] += s.prefill_s
+            agg["decode_s"] += s.decode_s
+            agg["slot_errors"] += s.slot_errors
+            agg["replica_shed"] += s.shed
+            per[rep.name] = {
+                "generated_tokens": s.generated_tokens,
+                "admitted": s.admitted,
+                "decode_tok_s": s.decode_tok_s,
+                "p95_step_s": s.latency_percentile(95),
+                "slot_errors": s.slot_errors,
+            }
+        return {"routed": dict(self.stats.routed),
+                "spilled": self.stats.spilled,
+                "shed": self.stats.shed,
+                "aggregate": agg,
+                "replicas": per}
+
+
+def make_replicas(model, params, cfg: SchedulerConfig, n_replicas: int, *,
+                  rules=None, disaggregate: bool = False,
+                  policies: Optional[Sequence[str]] = None
+                  ) -> List[Replica]:
+    """Build a homogeneous fleet sharing one set of params.
+
+    ``disaggregate=True`` builds each serving unit as a prefill-role +
+    decode-role pair (Lamy-Poirier-style phase split: the compute-bound
+    prefill worker feeds the memory-bound decode worker through the
+    ``insert_many`` handoff); the returned list holds the decode replicas —
+    the routable side — each with its partner at ``.prefill_replica``.
+    ``policies`` optionally overrides ``cfg.policy`` per replica
+    (cycled when shorter than the fleet).
+    """
+    if n_replicas < 1:
+        raise ValueError(f"need n_replicas >= 1, got {n_replicas}")
+    reps: List[Replica] = []
+    for i in range(n_replicas):
+        rcfg = cfg
+        if policies:
+            rcfg = dataclasses.replace(cfg, policy=policies[i % len(policies)])
+        if disaggregate:
+            pre = Replica(model, params, rcfg, rules=rules, role="prefill",
+                          name=f"prefill{i}")
+            reps.append(Replica(model, params, rcfg, rules=rules,
+                                role="decode", prefill_source=pre,
+                                name=f"decode{i}"))
+        else:
+            reps.append(Replica(model, params, rcfg, rules=rules,
+                                name=f"replica{i}"))
+    return reps

@@ -71,6 +71,17 @@ class SchedulerConfig:
     n_pages:      pool size when paged; 0 = dense-equivalent
                   (``n_slots * ceil(cache_len / page_size)`` — no memory
                   saving, same behavior; set lower to oversubscribe).
+    policy:       admission policy name (serve/policies.py): "fcfs" (the
+                  default — bitwise the behavior of
+                  :meth:`Scheduler.next_admission`, which stays the FCFS
+                  primitive), "shortest-prompt-first", or
+                  "budget-packing".
+    pack_budget:  token budget per admission round for
+                  policy="budget-packing": the round's total worst-case
+                  footprint (prompt_len + max_tokens per request) stays
+                  under it.  0 resolves to cache_len * prefill_batch —
+                  one full slot row per packed request, so the default
+                  never binds below the FCFS batch.
     """
 
     n_slots: int = 8
@@ -83,6 +94,8 @@ class SchedulerConfig:
     paged: bool = False
     page_size: int = 64
     n_pages: int = 0
+    policy: str = "fcfs"
+    pack_budget: int = 0
 
     @property
     def pages_per_slot(self) -> int:
@@ -96,6 +109,10 @@ class SchedulerConfig:
 
     def dense_equivalent_pages(self) -> int:
         return self.n_slots * self.pages_per_slot
+
+    @property
+    def resolved_pack_budget(self) -> int:
+        return self.pack_budget or self.cache_len * max(self.prefill_batch, 1)
 
     def ladder(self) -> Tuple[int, ...]:
         slw = SLWConfig(enabled=True, start_seq_len=self.min_prompt_bucket,

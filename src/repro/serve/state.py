@@ -42,6 +42,10 @@ class DecodeState(Protocol):
                ) -> Tuple[jax.Array, Any]:
         """One fused decode step for all slots; per-slot positions."""
 
+    def fit_row(self, row: Any, cache_len: int) -> Any:
+        """Pad/trim a model-format row's "seq" capacity to ``cache_len``
+        (cross-replica migration between mismatched cache geometries)."""
+
 
 def _tree_map_axes(fn, axes_tree, *trees):
     return jax.tree_util.tree_map(fn, axes_tree, *trees,
@@ -167,6 +171,33 @@ class SlotDecodeState:
                 return jnp.concatenate(cs, axis=ax.index("batch"))
             return jnp.stack([jnp.asarray(c) for c in cs])
         return _tree_map_axes(leaf, self._axes, *rows)
+
+    def fit_row(self, row, cache_len: int) -> Any:
+        """Pad/trim a model-format row's "seq" leaves to ``cache_len``.
+
+        Slot migration between replicas with mismatched cache geometry:
+        a paged gather returns ``pages_per_slot * page_size`` entries, a
+        dense row carries ``cache_len`` — the valid prefix (up to ``pos``)
+        is identical, and everything past it is garbage the insert target
+        never reads, so trimming is lossless as long as the destination's
+        capacity admits the request (the scheduler validated that).
+        Recurrent leaves (no "seq" axis) pass through untouched.
+        """
+        def leaf(ax, c):
+            if "seq" not in ax:
+                return c
+            si = ax.index("seq")
+            cur = c.shape[si]
+            if cur == cache_len:
+                return c
+            if cur > cache_len:
+                sl = [slice(None)] * c.ndim
+                sl[si] = slice(0, cache_len)
+                return c[tuple(sl)]
+            width = [(0, 0)] * c.ndim
+            width[si] = (0, cache_len - cur)
+            return jnp.pad(c, width)
+        return _tree_map_axes(leaf, self._axes, row)
 
     # -- placement ---------------------------------------------------------
     def shardings(self, rules, n_slots: int, cache_len: int):

@@ -47,6 +47,46 @@ class Request:
 
 
 @dataclass
+class PrefillOutcome:
+    """Per-row result of one ``EngineCore.prefill_batch`` call.
+
+    The device layer reports *which phase* failed for *which row*
+    (``error`` in ``"" | "prefill" | "replay" | "sample"``); what to do
+    about it — abort, retire, count — is the ``Replica`` layer's call.
+    A ``"prefill"`` error means the shared ``(k, bucket)`` phase failed,
+    so every row of the admission carries it.
+    """
+
+    slot: int
+    request: "Request"
+    first_token: Optional[int] = None
+    error: str = ""  # "" = ok | "prefill" | "replay" | "sample"
+
+
+@dataclass(frozen=True)
+class ReplicaTelemetry:
+    """Admission telemetry one replica exposes to the router.
+
+    ``free_pages`` is ``-1`` for dense (non-paged) replicas; ``p95_step_s``
+    is the trailing p95 fused-step latency from the stats ring.
+    """
+
+    name: str
+    queue_depth: int
+    active: int
+    free_slots: int
+    free_pages: int
+    p95_step_s: float
+
+    @property
+    def load(self) -> int:
+        """Requests in flight (queued + decoding) — the least-loaded
+        routing score.  Ties break on replica order, so an idle fleet
+        fills deterministically."""
+        return self.queue_depth + self.active
+
+
+@dataclass
 class GenerationResult:
     """Completed (or in-flight) generation for one request."""
 
